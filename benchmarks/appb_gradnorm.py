@@ -1,0 +1,66 @@
+"""Paper Appendix B: AdaLomo ± global gradient normalization.
+
+Claims: (1) convergence is unaffected — grouped update normalization
+already stabilizes; (2) the grad-norm variant costs a second backward pass
+(≈2× backward FLOPs), which we verify structurally from the jaxpr/HLO."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row, tiny_llama
+from repro.core import optimizers as opt_lib
+from repro.core.fused import fused_train_step, init_fused_opt_state
+from repro.data.pipeline import DataConfig, batches
+from repro.models.transformer import make_fused_spec
+
+
+def run(fast: bool = True) -> list:
+    steps = 40 if fast else 160
+    arch = tiny_llama()
+    spec = make_fused_spec(arch.cfg)
+    rule = opt_lib.get_rule("adalomo")
+    rows = []
+    finals, flops = {}, {}
+    # clip=5.0: at proxy scale early grad norms exceed 1.0 by far, so the
+    # paper's 1.0 threshold would act as an lr schedule rather than a
+    # safety clip; 5.0 binds only on spikes — matching the paper's regime.
+    for name, gn in [("no_gradnorm", None), ("gradnorm", 5.0)]:
+        key = jax.random.PRNGKey(0)
+        params = arch.init_params(key)
+        opt_state = init_fused_opt_state(rule, params)
+
+        def fn(p, s, b, _gn=gn):
+            return fused_train_step(spec, rule, p, s, b,
+                                    lr=jnp.float32(2e-3),
+                                    global_grad_norm=_gn)
+
+        jf = jax.jit(fn, donate_argnums=(0, 1))
+        dcfg = DataConfig(vocab=arch.cfg.vocab, seq_len=128, global_batch=8)
+        it = batches(dcfg)
+        compiled = jf.lower(params, opt_state,
+                            jax.tree.map(jnp.asarray, next(it))).compile()
+        from repro.launch.hlo_analysis import analyze
+        flops[name] = analyze(compiled.as_text())["flops"]
+        p, s = params, opt_state
+        loss = None
+        for _ in range(steps):
+            b = jax.tree.map(jnp.asarray, next(it))
+            p, s, loss, m = jf(p, s, b)
+        finals[name] = float(loss)
+        rows.append(fmt_row(f"appb/{name}", 0.0,
+                            f"final_loss={finals[name]:.4f};"
+                            f"hlo_flops={flops[name]:.3e}"))
+    ratio = flops["gradnorm"] / flops["no_gradnorm"]
+    gap = abs(finals["gradnorm"] - finals["no_gradnorm"])
+    rows.append(fmt_row(
+        "appb/claim", 0.0,
+        f"flops_ratio_2pass={ratio:.2f};loss_gap={gap:.4f};"
+        f"convergence_unaffected={bool(gap < 0.15)};"
+        f"second_pass_costly={bool(ratio > 1.5)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,57 @@
+"""Shared benchmark helpers: small-scale training comparisons on CPU."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import DataConfig, batches
+from repro.models.registry import Arch, get_arch
+from repro.models.transformer import LMConfig
+from repro.train.loop import TrainConfig, Trainer
+
+
+def tiny_llama(vocab=256, layers=4, d=128) -> Arch:
+    """~1.5M-param llama-architecture model: the CPU-scale stand-in for the
+    paper's LLaMA runs (same family as the 1.1B from-scratch config)."""
+    return Arch(
+        arch_id="tiny-llama", family="transformer",
+        cfg=LMConfig(name="tiny-llama", n_layers=layers, d_model=d,
+                     n_heads=4, n_kv_heads=2, d_ff=d * 3, vocab=vocab,
+                     dtype=jnp.float32))
+
+
+# Paper LRs (Table 3/6/7) rescaled for the tiny proxy model; the paper's
+# AdaLomo/AdamW lr ratio is 25-50x, and the grouped-norm trust ratio makes
+# AdaLomo tolerant of large lr (tests/core/test_adalomo.py).
+LRS = {"adalomo": 1e-2, "adafactor": 1e-2, "adamw": 2e-3, "lomo": 3e-2,
+       "sgd": 3e-2, "sgd_momentum": 3e-2, "sgd_variance": 2e-3}
+
+
+def train_curve(arch: Arch, optimizer: str, *, steps=60, batch=8, seq=128,
+                lr=None, fused=None, seed=0, data_seed=0,
+                eval_every=0) -> dict:
+    """Train and return {'history', 'us_per_step'}."""
+    fused = fused if fused is not None else optimizer in (
+        "adalomo", "lomo", "sgd")
+    tcfg = TrainConfig(optimizer=optimizer, lr=lr or LRS[optimizer],
+                       total_steps=steps, fused=fused, log_every=0,
+                       eval_every=eval_every)
+    trainer = Trainer(arch, tcfg, log_fn=lambda s: None)
+    params, opt_state = trainer.init(seed)
+    dcfg = DataConfig(vocab=arch.cfg.vocab, seq_len=seq, global_batch=batch,
+                      seed=data_seed)
+    ev = batches(DataConfig(vocab=arch.cfg.vocab, seq_len=seq,
+                            global_batch=batch, seed=data_seed + 999))
+    t0 = time.time()
+    out = trainer.fit(params, opt_state, batches(dcfg),
+                      eval_iter=ev if eval_every else None)
+    wall = time.time() - t0
+    return {"history": out["history"],
+            "us_per_step": wall / steps * 1e6,
+            "params": out["params"]}
+
+
+def fmt_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

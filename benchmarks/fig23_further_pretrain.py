@@ -1,0 +1,51 @@
+"""Paper Figures 2/3 proxy: further pre-training on a domain-shifted
+corpus (different token distribution + different structure seed), AdaLomo
+vs AdamW; loss curves should overlap and the validation ppl match."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row, tiny_llama, train_curve
+from repro.data.pipeline import DataConfig, batches
+from repro.train.loop import TrainConfig, Trainer
+
+
+def run(fast: bool = True) -> list:
+    steps = 60 if fast else 300
+    arch = tiny_llama()
+    # stage 1: "pre-train" briefly on domain A
+    base = train_curve(arch, "adamw", steps=steps // 2, data_seed=0)
+    rows = []
+    finals = {}
+    for opt in ("adalomo", "adamw"):
+        # stage 2: further pre-train on domain B (shifted distribution).
+        # paper lr ratio (Table 6): AdaLomo ≈ 30× AdamW's
+        tcfg = TrainConfig(optimizer=opt,
+                           lr=2e-2 if opt == "adalomo" else 1e-3,
+                           total_steps=steps,
+                           fused=opt == "adalomo", log_every=0)
+        trainer = Trainer(arch, tcfg, log_fn=lambda s: None)
+        from repro.core.fused import init_fused_opt_state
+        opt_state = init_fused_opt_state(trainer.rule, base["params"])
+        dcfg = DataConfig(vocab=arch.cfg.vocab, seq_len=128, global_batch=8,
+                          seed=4242)  # domain shift
+        out = trainer.fit(jax.tree.map(jnp.copy, base["params"]), opt_state,
+                          batches(dcfg))
+        h = out["history"]
+        finals[opt] = h["loss"][-1]
+        rows.append(fmt_row(
+            f"fig23/{opt}", 0.0,
+            f"start_loss={h['loss'][0]:.4f};final_loss={h['loss'][-1]:.4f};"
+            f"ppl={float(jnp.exp(h['loss'][-1])):.2f}"))
+    gap = abs(finals["adalomo"] - finals["adamw"])
+    rows.append(fmt_row(
+        "fig23/claim", 0.0,
+        f"curves_overlap_gap={gap:.4f};ok={bool(gap < 0.5)} "
+        f"(60-step CPU-proxy horizon; paper parity is at convergence)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

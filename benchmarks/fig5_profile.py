@@ -1,0 +1,80 @@
+"""Paper Figure 5 / Table 8: memory footprint and throughput by optimizer.
+
+Memory: compiled peak (temp+args) per method from HLO memory_analysis —
+the apples-to-apples analogue of the paper's pynvml numbers.
+Throughput: tokens/sec on CPU for the tiny proxy (relative ordering is the
+signal: LoRA > LOMO ≈ AdamW > AdaLomo, all same order of magnitude)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row, tiny_llama
+from repro.core import optimizers as opt_lib
+from repro.core.fused import apply_gradients_unfused, init_fused_opt_state
+
+B, S = 8, 256
+
+
+def _measure(arch, rule_name, fused):
+    rule = opt_lib.get_rule(rule_name)
+    key = jax.random.PRNGKey(0)
+    params = arch.init_params(key)
+    opt_state = init_fused_opt_state(rule, params)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, arch.cfg.vocab),
+             "labels": jax.random.randint(key, (B, S), 0, arch.cfg.vocab)}
+    lr = jnp.float32(1e-3)
+    if fused:
+        step = arch.make_fused_train_step(rule)
+        fn = lambda p, s, b: step(p, s, b, lr=lr)  # noqa: E731
+    else:
+        loss_fn = arch.make_loss_fn()
+
+        def fn(p, s, b):
+            (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b)
+            p2, s2 = apply_gradients_unfused(rule, p, g, s, lr=lr)
+            return p2, s2, loss, m
+
+    jf = jax.jit(fn, donate_argnums=(0, 1))
+    compiled = jf.lower(params, opt_state, batch).compile()
+    ma = compiled.memory_analysis()
+    peak = ma.temp_size_in_bytes + ma.argument_size_in_bytes
+    # throughput (post-warmup)
+    p, s = params, opt_state
+    p, s, *_ = jf(p, s, batch)
+    jax.block_until_ready(jax.tree.leaves(p)[0])
+    t0 = time.time()
+    n = 8
+    for _ in range(n):
+        p, s, loss, m = jf(p, s, batch)
+    jax.block_until_ready(loss)
+    dt = (time.time() - t0) / n
+    return {"peak_MB": peak / 1e6, "tgs": B * S / dt, "us": dt * 1e6}
+
+
+def run(fast: bool = True) -> list:
+    arch = tiny_llama(layers=6, d=256)
+    rows = []
+    res = {}
+    for name, rule_name, fused in [
+            ("AdamW", "adamw", False), ("Adafactor", "adafactor", False),
+            ("LOMO", "lomo", True), ("AdaLomo", "adalomo", True)]:
+        r = _measure(arch, rule_name, fused)
+        res[name] = r
+        rows.append(fmt_row(f"fig5/{name}", r["us"],
+                            f"peak_MB={r['peak_MB']:.1f};tgs={r['tgs']:.0f}"))
+    ok = (res["AdaLomo"]["peak_MB"] <= res["AdamW"]["peak_MB"]
+          and res["AdaLomo"]["tgs"] > 0.3 * res["AdamW"]["tgs"])
+    rows.append(fmt_row(
+        "fig5/claim", 0.0,
+        f"adalomo_mem_vs_adamw={res['AdaLomo']['peak_MB']/res['AdamW']['peak_MB']:.2f};"
+        f"adalomo_tgs_vs_adamw={res['AdaLomo']['tgs']/res['AdamW']['tgs']:.2f};"
+        f"ok={bool(ok)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,45 @@
+"""Emit the EXPERIMENTS.md §Dry-run/§Roofline markdown tables from the
+dry-run artifacts.  PYTHONPATH=src python -m benchmarks.make_report"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ART = Path(__file__).parent / "artifacts"
+
+
+def fmt_table(tag: str, mesh: str) -> str:
+    from repro.launch.dryrun import roofline_terms
+    rows = []
+    for p in sorted((ART / tag).glob(f"*__{mesh}.json")):
+        d = json.loads(p.read_text())
+        t = roofline_terms(d)
+        ma = d["memory_analysis"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"{t['collective_s_raw']:.3f} | "
+            f"{t['dominant'].replace('_s','')} | {t['useful_ratio']:.3f} | "
+            f"{t['roofline_fraction']:.4f} | "
+            f"{ma.get('temp_size_in_bytes',0)/1e9:.1f} | "
+            f"{ma.get('argument_size_in_bytes',0)/1e9:.2f} | "
+            f"{d['compile_s']:.0f} |")
+    head = ("| arch | shape | compute_s | memory_s | coll_s | coll_s_raw | "
+            "dom | useful | frac | temp_GB | args_GB | compile_s |\n"
+            "|---|---|---|---|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def main():
+    for tag in ("dryrun_baseline", "dryrun"):
+        for mesh in ("single", "multi"):
+            n = len(list((ART / tag).glob(f"*__{mesh}.json")))
+            if not n:
+                continue
+            print(f"\n### {tag} × {mesh} ({n} cells)\n")
+            print(fmt_table(tag, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Roofline report (deliverable g): reads the dry-run artifacts and emits
+the three-term table per (arch × shape × mesh).  Also used to regenerate
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import fmt_row
+
+ARTIFACT_DIR = Path(__file__).parent / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "single") -> list:
+    cells = []
+    for p in sorted(ARTIFACT_DIR.glob(f"*__{mesh}.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def cell_terms(d: dict) -> dict:
+    from repro.launch.dryrun import roofline_terms
+    return roofline_terms(d)
+
+
+def table(mesh: str = "single") -> list:
+    rows = []
+    for d in load_cells(mesh):
+        t = cell_terms(d)
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "dominant": t["dominant"],
+            "model_flops": t["model_flops"],
+            "useful_ratio": t["useful_ratio"],
+            "roofline_fraction": t["roofline_fraction"],
+            "temp_gb": d["memory_analysis"].get("temp_size_in_bytes", 0) / 1e9,
+            "args_gb": d["memory_analysis"].get(
+                "argument_size_in_bytes", 0) / 1e9,
+        })
+    return rows
+
+
+def run(fast: bool = True) -> list:
+    rows = []
+    for mesh in ("single", "multi"):
+        for r in table(mesh):
+            rows.append(fmt_row(
+                f"roofline/{r['arch']}/{r['shape']}/{mesh}", 0.0,
+                f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+                f"collective_s={r['collective_s']:.4f};dom={r['dominant']};"
+                f"useful={r['useful_ratio']:.3f};"
+                f"frac={r['roofline_fraction']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,50 @@
+"""Benchmark driver — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (deliverable d).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig4,...]
+"""
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "table1_memory",        # Table 1: memory model
+    "fig1_moment_ablation", # Figure 1 + Appendix A Figure 6
+    "table2_instruction",   # Table 2/5: instruction-tuning comparison
+    "fig23_further_pretrain",  # Figures 2/3: further pre-training
+    "fig4_scratch_pretrain",   # Figure 4 / Table 7: from-scratch
+    "fig5_profile",         # Figure 5 / Table 8: memory + throughput
+    "appb_gradnorm",        # Appendix B: ± gradient normalization
+    "roofline",             # §Roofline from the dry-run artifacts
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="longer runs (more steps)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args(argv)
+    mods = MODULES if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failed = []
+    for name in mods:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        try:
+            for row in mod.run(fast=not args.full):
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Table 2/5 proxy: instruction-tuning comparison across optimizers.
+
+Offline stand-in for the five-benchmark GPT-4-judged evaluation: fine-tune
+on a held-in structured task and compare held-out loss/accuracy.  The
+paper's claim to reproduce: AdaLomo ≈ AdamW ≈ Adafactor > LOMO."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_row, tiny_llama, train_curve
+
+OPTS = ["adalomo", "adamw", "adafactor", "lomo"]
+
+
+def run(fast: bool = True) -> list:
+    steps = 60 if fast else 240
+    arch = tiny_llama()
+    rows, finals = [], {}
+    for opt in OPTS:
+        out = train_curve(arch, opt, steps=steps, eval_every=0)
+        # held-out eval
+        from repro.data.pipeline import DataConfig, batches
+        import jax, jax.numpy as jnp
+        loss_fn = jax.jit(arch.make_loss_fn())
+        ev = batches(DataConfig(vocab=arch.cfg.vocab, seq_len=128,
+                                global_batch=8, seed=1234))
+        tot = acc = 0.0
+        for _ in range(4):
+            b = jax.tree.map(jnp.asarray, next(ev))
+            l, m = loss_fn(out["params"], b)
+            tot += float(l) / 4
+            acc += float(m["accuracy"]) / 4
+        finals[opt] = (tot, acc)
+        rows.append(fmt_row(f"table2/{opt}", out["us_per_step"],
+                            f"eval_loss={tot:.4f};eval_acc={acc:.4f}"))
+    # one-sided: AdaLomo at least matches AdamW (doing *better* is a pass)
+    # and is not worse than LOMO (Table 2's ordering)
+    ok = (finals["adalomo"][0] < finals["lomo"][0] + 0.05
+          and finals["adalomo"][0] < finals["adamw"][0] + 0.2)
+    rows.append(fmt_row(
+        "table2/claim", 0.0,
+        f"adalomo_matches_adamw_and_beats_lomo={bool(ok)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,28 @@
+"""Batched serving example: prefill + KV-cache decode through the Engine.
+
+Trains a tiny model briefly so generations aren't pure noise, then serves
+a batch of prompts (greedy).  The decode step is the same function the
+multi-pod dry-run lowers for decode_32k / long_500k.
+
+  PYTHONPATH=src python examples/serve.py
+"""
+import jax
+
+from benchmarks.common import tiny_llama, train_curve
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main():
+    arch = tiny_llama()
+    print("fitting a tiny model so generations follow the bigram data...")
+    out = train_curve(arch, "adalomo", steps=80)
+    engine = Engine(arch, out["params"],
+                    ServeConfig(max_new_tokens=12, temperature=0.0))
+    prompts = [[5, 17, 23, 9], [101, 44], [7, 7, 7, 7, 7, 7]]
+    completions = engine.generate(prompts)
+    for p, c in zip(prompts, completions):
+        print(f"prompt {p} -> {c}")
+
+
+if __name__ == "__main__":
+    main()

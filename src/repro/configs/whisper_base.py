@@ -1,0 +1,20 @@
+"""whisper-base [audio] — enc-dec; conv frontend STUBBED (input_specs feeds
+precomputed frame embeddings).  See DESIGN.md §4 for deviations."""
+from repro.models.encdec import EncDecConfig
+
+ARCH_ID = "whisper-base"
+FAMILY = "encdec"
+
+
+def config() -> EncDecConfig:
+    return EncDecConfig(
+        name=ARCH_ID, n_enc_layers=6, n_dec_layers=6, d_model=512,
+        n_heads=8, n_kv_heads=8, d_ff=2048, vocab=51865, n_frames=1500)
+
+
+def smoke_config() -> EncDecConfig:
+    import jax.numpy as jnp
+    return EncDecConfig(
+        name=ARCH_ID + "-smoke", n_enc_layers=2, n_dec_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, d_ff=128, vocab=128, n_frames=24,
+        dtype=jnp.float32)

@@ -1,0 +1,58 @@
+"""Tree-level optimizer API (the unfused path) built on per-tensor rules.
+
+``Optimizer`` applies a :class:`~repro.core.optimizers.TensorRule` across a
+parameter pytree — the conventional "materialize all grads, then step"
+approach that AdamW/Adafactor baselines use, and the contrast point for the
+fused engine in ``core/fused.py``.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optimizers import TensorRule
+
+Array = jax.Array
+
+
+class OptState(NamedTuple):
+    step: Array            # scalar int32, 1-based after first update
+    moments: Any           # pytree matching params, of per-tensor rule states
+
+
+class Optimizer:
+    """Wraps a per-tensor rule into a whole-pytree optimizer."""
+
+    def __init__(self, rule: TensorRule):
+        self.rule = rule
+
+    @property
+    def name(self) -> str:
+        return self.rule.name
+
+    def init(self, params) -> OptState:
+        moments = jax.tree.map(self.rule.init, params)
+        return OptState(step=jnp.zeros((), jnp.int32), moments=moments)
+
+    def apply_gradients(self, params, grads, state: OptState, *, lr
+                        ) -> tuple[Any, OptState]:
+        """θ, s ← rule(θ, g, s) for every tensor. lr may be a scalar array."""
+        step = state.step + 1
+        stepf = step.astype(jnp.float32)
+
+        def upd(p, g, s):
+            return self.rule.update(p, g, s, lr=lr, step=stepf)
+
+        out = jax.tree.map(upd, params, grads, state.moments,
+                           is_leaf=lambda x: x is None)
+        # Split the (param, state) tuples back into two trees.
+        treedef = jax.tree.structure(params)
+        flat = treedef.flatten_up_to(out)
+        new_params = treedef.unflatten([t[0] for t in flat])
+        new_moments = treedef.unflatten([t[1] for t in flat])
+        return new_params, OptState(step=step, moments=new_moments)
+
+    def state_bytes(self, params) -> int:
+        return sum(self.rule.state_bytes(p) for p in jax.tree.leaves(params))

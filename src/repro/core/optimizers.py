@@ -1,0 +1,226 @@
+"""Baseline optimizers the paper compares against, as per-tensor rules.
+
+Every optimizer here (and AdaLomo in ``adalomo.py``) is exposed through the
+same ``TensorRule`` interface:
+
+    rule.init(param)                          -> state
+    rule.update(param, grad, state, lr, step) -> (new_param, new_state)
+
+so that any rule can run (i) unfused via the tree-level API or (ii) fused
+into the backward scan (``core/fused.py``).  LOMO is literally
+``sgd()`` under the fused engine; the paper's §2.2 ablations are
+``sgd_momentum()`` (Eq. 3) and ``sgd_variance()`` (Eq. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adalomo as _adalomo
+
+Array = jax.Array
+
+
+class TensorRule(NamedTuple):
+    """A per-tensor optimizer: pure init and update functions."""
+
+    name: str
+    init: Callable[[Array], Any]
+    update: Callable[..., tuple[Array, Any]]  # (p, g, s, *, lr, step)
+    # Analytic per-tensor optimizer-state bytes (Table-1 benchmark).
+    state_bytes: Callable[[Array], int]
+
+
+def _bytes_of(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def _rule_from_fns(name, init_fn, update_fn) -> TensorRule:
+    def state_bytes(param: Array) -> int:
+        st = jax.eval_shape(init_fn, param)
+        return _bytes_of(st)
+
+    return TensorRule(name=name, init=init_fn, update=update_fn,
+                      state_bytes=state_bytes)
+
+
+# --------------------------------------------------------------------------
+# AdaLomo (re-exported as a rule)
+# --------------------------------------------------------------------------
+
+def adalomo(cfg: Optional[_adalomo.AdaLomoConfig] = None) -> TensorRule:
+    cfg = cfg or _adalomo.AdaLomoConfig()
+
+    def init_fn(param):
+        return _adalomo.init_state(param, cfg)
+
+    def update_fn(param, grad, state, *, lr, step):
+        return _adalomo.update_tensor(param, grad, state, lr=lr, step=step,
+                                      cfg=cfg)
+
+    return _rule_from_fns("adalomo", init_fn, update_fn)
+
+
+# --------------------------------------------------------------------------
+# SGD family (paper Eq. 1, 3, 4) — LOMO is fused sgd()
+# --------------------------------------------------------------------------
+
+def sgd() -> TensorRule:
+    """Plain SGD — the LOMO update rule (paper Eq. 1)."""
+
+    def init_fn(param):
+        return ()
+
+    def update_fn(param, grad, state, *, lr, step):
+        del step
+        p32 = param.astype(jnp.float32)
+        new_param = (p32 - lr * grad.astype(jnp.float32)).astype(param.dtype)
+        return new_param, state
+
+    return _rule_from_fns("sgd", init_fn, update_fn)
+
+
+class MomentumState(NamedTuple):
+    m: Array
+
+
+def sgd_momentum(beta1: float = 0.9, bias_correction: bool = True
+                 ) -> TensorRule:
+    """First-moment-only ablation (paper Eq. 3)."""
+
+    def init_fn(param):
+        return MomentumState(m=jnp.zeros(param.shape, jnp.float32))
+
+    def update_fn(param, grad, state, *, lr, step):
+        g32 = grad.astype(jnp.float32)
+        m = beta1 * state.m + (1.0 - beta1) * g32
+        m_hat = m / (1.0 - beta1 ** step) if bias_correction else m
+        p32 = param.astype(jnp.float32)
+        return (p32 - lr * m_hat).astype(param.dtype), MomentumState(m=m)
+
+    return _rule_from_fns("sgd_momentum", init_fn, update_fn)
+
+
+class VarianceState(NamedTuple):
+    v: Array
+
+
+def sgd_variance(beta2: float = 0.999, eps: float = 1e-8,
+                 bias_correction: bool = True) -> TensorRule:
+    """Second-moment-only ablation (paper Eq. 4) — the 'SGD with variance'
+    curve in Fig. 1/6 that motivates AdaLomo."""
+
+    def init_fn(param):
+        return VarianceState(v=jnp.zeros(param.shape, jnp.float32))
+
+    def update_fn(param, grad, state, *, lr, step):
+        g32 = grad.astype(jnp.float32)
+        v = beta2 * state.v + (1.0 - beta2) * jnp.square(g32)
+        v_hat = v / (1.0 - beta2 ** step) if bias_correction else v
+        p32 = param.astype(jnp.float32)
+        upd = g32 / (jnp.sqrt(v_hat) + eps)
+        return (p32 - lr * upd).astype(param.dtype), VarianceState(v=v)
+
+    return _rule_from_fns("sgd_variance", init_fn, update_fn)
+
+
+# --------------------------------------------------------------------------
+# AdamW (paper Eq. 2 + decoupled weight decay) — the de-facto baseline
+# --------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    m: Array
+    v: Array
+
+
+def adamw(beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> TensorRule:
+    def init_fn(param):
+        return AdamState(m=jnp.zeros(param.shape, jnp.float32),
+                         v=jnp.zeros(param.shape, jnp.float32))
+
+    def update_fn(param, grad, state, *, lr, step):
+        g32 = grad.astype(jnp.float32)
+        m = beta1 * state.m + (1.0 - beta1) * g32
+        v = beta2 * state.v + (1.0 - beta2) * jnp.square(g32)
+        m_hat = m / (1.0 - beta1 ** step)
+        v_hat = v / (1.0 - beta2 ** step)
+        p32 = param.astype(jnp.float32)
+        if weight_decay:
+            p32 = p32 * (1.0 - lr * weight_decay)
+        upd = m_hat / (jnp.sqrt(v_hat) + eps)
+        return (p32 - lr * upd).astype(param.dtype), AdamState(m=m, v=v)
+
+    return _rule_from_fns("adamw", init_fn, update_fn)
+
+
+# --------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018) — the factored-moment baseline.
+# AdaLomo's Table-1 claim: same-quality factored state, but grads are O(1)
+# because the update happens inside the backward pass.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    decay_rate: float = 0.8        # β2_t = 1 - t^{-decay_rate}
+    eps_stat: float = 1e-30
+    eps_rms: float = 1e-3
+    clip_threshold: float = 1.0
+    min_dim_size_to_factor: int = 16
+    factored: bool = True
+    relative_step_scale: bool = True  # multiply update by max(eps2, RMS(θ))
+
+
+def adafactor(cfg: Optional[AdafactorConfig] = None) -> TensorRule:
+    cfg = cfg or AdafactorConfig()
+    # Reuse AdaLomo's factored-state container/init with matching thresholds.
+    al_cfg = _adalomo.AdaLomoConfig(
+        min_dim_size_to_factor=cfg.min_dim_size_to_factor,
+        factored=cfg.factored, eps_stat=cfg.eps_stat)
+
+    def init_fn(param):
+        return _adalomo.init_state(param, al_cfg)
+
+    def update_fn(param, grad, state, *, lr, step):
+        g32 = grad.astype(jnp.float32)
+        g2 = jnp.square(g32) + cfg.eps_stat
+        beta2t = 1.0 - step.astype(jnp.float32) ** (-cfg.decay_rate)
+        if state.v is not None:
+            v = beta2t * state.v + (1.0 - beta2t) * g2
+            new_state = _adalomo.FactoredState(r=None, c=None, v=v)
+        else:
+            r = beta2t * state.r + (1.0 - beta2t) * jnp.mean(g2, axis=-1)
+            c = beta2t * state.c + (1.0 - beta2t) * jnp.mean(g2, axis=-2)
+            new_state = _adalomo.FactoredState(r=r, c=c, v=None)
+        v_hat = _adalomo.reconstruct_v(new_state, al_cfg)
+        u = g32 * jax.lax.rsqrt(v_hat + cfg.eps_stat)
+        axes = _adalomo._matrix_axes(u.ndim)
+        rms_u = _adalomo._rms(u, axes)
+        u = u / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+        if cfg.relative_step_scale:
+            u = u * jnp.maximum(cfg.eps_rms,
+                                _adalomo._rms(param.astype(jnp.float32), axes))
+        p32 = param.astype(jnp.float32)
+        return (p32 - lr * u).astype(param.dtype), new_state
+
+    return _rule_from_fns("adafactor", init_fn, update_fn)
+
+
+REGISTRY: dict[str, Callable[..., TensorRule]] = {
+    "adalomo": adalomo,
+    "lomo": sgd,       # LOMO == fused SGD
+    "sgd": sgd,
+    "sgd_momentum": sgd_momentum,
+    "sgd_variance": sgd_variance,
+    "adamw": adamw,
+    "adafactor": adafactor,
+}
+
+
+def get_rule(name: str, **kwargs) -> TensorRule:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown optimizer {name!r}; have {list(REGISTRY)}")
+    return REGISTRY[name](**kwargs)

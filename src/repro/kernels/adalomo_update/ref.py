@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused AdaLomo update kernel.
+
+This is literally the paper-faithful per-tensor update from
+``repro.core.adalomo`` — the kernel must match it bit-for-bit in fp32
+(modulo reduction-order rounding, covered by allclose tolerances).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adalomo import AdaLomoConfig, FactoredState, update_tensor
+
+
+def adalomo_update_ref(param, grad, r, c, *, lr, step,
+                       cfg: AdaLomoConfig = AdaLomoConfig()):
+    """param/grad: [m, n]; r: [m]; c: [n]. Returns (new_param, new_r, new_c).
+
+    Matches core.adalomo.update_tensor with a factored state.
+    """
+    state = FactoredState(r=r, c=c, v=None)
+    new_param, new_state = update_tensor(
+        param, grad, state, lr=jnp.asarray(lr, jnp.float32),
+        step=jnp.asarray(step, jnp.float32), cfg=cfg)
+    return new_param, new_state.r, new_state.c

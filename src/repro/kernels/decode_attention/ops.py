@@ -1,0 +1,21 @@
+"""Jitted wrapper for the flash-decoding kernel (batch-uniform positions)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import (
+    DEFAULT_KV_BLOCK, decode_attention_pallas)
+
+
+def decode_attention(q, k_cache, v_cache, kv_pos, q_pos, *, scale=None,
+                     window=None, kv_block=DEFAULT_KV_BLOCK,
+                     interpret=False):
+    """Drop-in for models.layers.decode_attention when positions are
+    uniform across the batch (the serving engine's layout).
+
+    q: [B,1,H,dh] → [B,1,H,dh]; kv_pos: [W]; q_pos: python/int scalar."""
+    out = decode_attention_pallas(
+        q[:, 0], k_cache, v_cache, jnp.asarray(kv_pos),
+        q_pos, scale=scale, window=window, kv_block=kv_block,
+        interpret=interpret)
+    return out[:, None]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the flash-decoding kernel: exactly
+repro.models.layers.decode_attention (the serving path's attention)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import decode_attention
+
+
+def decode_attention_ref(q, k_cache, v_cache, *, kv_pos, q_pos,
+                         window=None, scale=None):
+    """q: [B,H,dh]; caches: [B,W,K,dh]; kv_pos: [B,W]; q_pos: [B].
+    Returns [B,H,dh]."""
+    out = decode_attention(q[:, None], k_cache, v_cache, kv_pos=kv_pos,
+                           q_pos=q_pos, window=window, scale=scale)
+    return out[:, 0]

@@ -1,0 +1,91 @@
+"""Per-shape collective breakdown from a saved .hlo.gz — the 'profiler'
+view for the §Perf hypothesis loop: which tensors generate the wire bytes.
+
+  PYTHONPATH=src python -m repro.launch.collective_breakdown \
+      benchmarks/artifacts/dryrun/qwen3-32b__train_4k__single.hlo.gz
+"""
+from __future__ import annotations
+
+import gzip
+import re
+import sys
+from collections import defaultdict
+
+from repro.launch.hlo_analysis import (_COLLECTIVES, _Analyzer, parse_hlo,
+                                       _shapes_bytes)
+
+
+def breakdown(hlo_text: str, top: int = 18) -> list:
+    comps, entry = parse_hlo(hlo_text)
+    an = _Analyzer(comps)
+    # count trips per computation by walking from entry
+    trips: dict[str, float] = defaultdict(float)
+
+    def walk(name: str, mult: float, seen: tuple):
+        if name in seen:
+            return
+        trips[name] += mult
+        comp = comps[name]
+        for instr in comp.instructions:
+            if instr.opcode == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", instr.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", instr.line)
+                t = an.trip_count(mc.group(1)) if mc else 1
+                if mb and mb.group(1) in comps:
+                    walk(mb.group(1), mult * t, seen + (name,))
+            elif instr.opcode in ("call", "fusion", "map", "custom-call"):
+                m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", instr.line)
+                if m and m.group(1) in comps:
+                    walk(m.group(1), mult, seen + (name,))
+            elif instr.opcode == "conditional":
+                m = re.search(r"branch_computations=\{([^}]*)\}", instr.line)
+                if m:
+                    for nm in re.findall(r"%?([\w.\-]+)", m.group(1)):
+                        if nm in comps:
+                            walk(nm, mult, seen + (name,))
+
+    walk(entry, 1.0, ())
+
+    agg = defaultdict(lambda: [0.0, 0])  # (kind, shape, dtype) -> [bytes, n]
+    for cname, mult in trips.items():
+        comp = comps[cname]
+        for instr in comp.instructions:
+            op = instr.opcode
+            base = None
+            for k in _COLLECTIVES:
+                if op == k or op.startswith(k + "-"):
+                    base = k
+                    break
+            if base is None or op.endswith("-done"):
+                continue
+            rb = _shapes_bytes(instr.result_shapes)
+            ob = sum(_shapes_bytes(comp.symbols.get(nm, []))
+                     for nm in instr.operand_names)
+            wire = rb if base == "all-gather" else (
+                2 * rb if base == "all-reduce" else ob)
+            groups = re.search(r"replica_groups=\[([\d,]+)\]", instr.line)
+            sig = ",".join(f"{t}[{'x'.join(map(str, d))}]"
+                           for t, d in instr.result_shapes[:2])
+            meta = re.search(r'op_name="([^"]*)"', instr.line)
+            tag = (meta.group(1).split("/")[-1][:40] if meta else "")
+            key = (base, sig, groups.group(1) if groups else "?", tag)
+            agg[key][0] += wire * mult
+            agg[key][1] += int(mult)
+    rows = sorted(((v[0], v[1], k) for k, v in agg.items()), reverse=True)
+    return rows[:top]
+
+
+def main():
+    path = sys.argv[1]
+    text = gzip.open(path, "rt").read()
+    rows = breakdown(text)
+    total = sum(r[0] for r in rows)
+    print(f"{'wire GB':>9} {'count':>6}  kind            result"
+          f"              groups      op")
+    for wire, n, (kind, sig, grp, tag) in rows:
+        print(f"{wire/1e9:9.2f} {n:6d}  {kind:<15} {sig:<19} {grp:<11} {tag}")
+    print(f"(top rows total {total/1e9:.1f} GB wire)")
+
+
+if __name__ == "__main__":
+    main()

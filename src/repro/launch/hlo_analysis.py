@@ -1,0 +1,336 @@
+"""Loop-aware cost analysis over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each computation ONCE — a
+``lax.scan`` over 61 layers contributes 1/61 of its true FLOPs, bytes and
+collective traffic.  Since every model here is scan-over-layers (that's
+what makes the fused AdaLomo backward O(1)-gradient), loop-blind numbers
+are useless for a roofline.  This module parses the (SPMD, per-device) HLO
+text, builds per-computation symbol tables and the call graph, extracts
+while-loop trip counts from condition computations, and multiplies costs
+through the graph.
+
+Cost model per instruction:
+  * dot:            2 · numel(result) · prod(lhs contracting dims)
+  * convolution:    2 · numel(result) · numel(kernel)/out_channels (approx)
+  * elementwise/reduce: 1 FLOP per result element (secondary term)
+  * HBM bytes:      operands + result of top-level instructions — mirrors
+                    XLA's bytes-accessed model (fusion interiors excluded)
+  * collectives:    operand bytes, plus derived per-device wire bytes
+                    (all-gather ≈ result, all-reduce ≈ 2·result, others ≈
+                    operand — ring-algorithm (N-1)/N → 1 for large N)
+
+Known approximations (EXPERIMENTS.md §Method):
+  * conditional branches count the max-FLOPs branch;
+  * trip count = largest integer constant in the while condition
+    (matches jax-lowered scans; validated against known-L models);
+  * get-tuple-element/bitcast/tuple are free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_TOKEN = re.compile(r"\b([a-z]+\d+[a-z0-9]*|pred)\[([\d,]*)\]")
+
+
+def _numel(dims: tuple) -> int:
+    return math.prod(dims) if dims else 1
+
+
+def _parse_shapes(sig: str) -> list:
+    """All (dtype, dims tuple) in a type signature string."""
+    out = []
+    for t, d in _SHAPE_TOKEN.findall(sig):
+        dims = tuple(int(x) for x in d.split(",")) if d else ()
+        out.append((t, dims))
+    return out
+
+
+def _shapes_bytes(shapes: list) -> int:
+    return sum(_numel(d) * _DTYPE_BYTES.get(t, 4) for t, d in shapes)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll_operand: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_wire: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    # bf16-equivalent wire: XLA:CPU legalizes bf16 dots to f32 *before* SPMD
+    # partitioning, so weight/grad collectives appear at 2× their TPU width
+    # (TPU keeps bf16 through the MXU).  f32 collectives ≥1 MB are counted
+    # at half width here; small fp32 reductions (factored stats, RMS
+    # scalars) are genuinely fp32 and counted full.  EXPERIMENTS.md §Method.
+    coll_wire_bf16: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_count: dict = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in _COLLECTIVES})
+
+    def add(self, other: "Cost", times: float = 1.0):
+        self.flops += other.flops * times
+        self.bytes += other.bytes * times
+        self.transcendentals += other.transcendentals * times
+        for k in _COLLECTIVES:
+            self.coll_operand[k] += other.coll_operand[k] * times
+            self.coll_wire[k] += other.coll_wire[k] * times
+            self.coll_wire_bf16[k] += other.coll_wire_bf16[k] * times
+            self.coll_count[k] += int(other.coll_count[k] * times)
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result_shapes: list      # [(dtype, dims)]
+    operand_names: list      # ["x.1", ...]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: list
+    symbols: dict            # name -> [(dtype, dims)]
+    is_fused: bool = False
+
+
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[a-z][\w\[\],\s{}()\/]*?)\s+"
+    r"([\w\-]+)\((.*)$")
+_HEADER = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+
+
+def parse_hlo(text: str) -> tuple:
+    """Returns (computations dict, entry name)."""
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    comment = re.compile(r"/\*.*?\*/")
+    for raw in text.splitlines():
+        line = comment.sub("", raw.rstrip())
+        s = line.strip()
+        if not s or s.startswith("//") or s.startswith("HloModule"):
+            continue
+        if s.endswith("{") and "->" in s and "=" not in s.split("->")[0]:
+            m = _HEADER.match(s)
+            if m:
+                name, params_sig = m.group(1), m.group(2)
+                cur = Computation(name=name, instructions=[], symbols={},
+                                  is_fused="fused" in name)
+                comps[name] = cur
+                if s.lstrip().startswith("ENTRY"):
+                    entry = name
+                # parameters: "x.1: f32[8,16], w.1: f32[16,4]"
+                for pm in re.finditer(
+                        r"%?([\w.\-]+)\s*:\s*((?:\([^)]*\))|(?:[\w\[\],]+))",
+                        params_sig):
+                    cur.symbols[pm.group(1)] = _parse_shapes(pm.group(2))
+            continue
+        if s.startswith("}"):
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, result_sig, opcode, rest = m.groups()
+        depth, j = 1, 0
+        while j < len(rest) and depth:
+            if rest[j] == "(":
+                depth += 1
+            elif rest[j] == ")":
+                depth -= 1
+            j += 1
+        args_sig = rest[:j - 1] if j else rest
+        result_shapes = _parse_shapes(result_sig)
+        operand_names = _OPERAND_NAME.findall(args_sig)
+        cur.symbols[name] = result_shapes
+        cur.instructions.append(
+            Instruction(name, opcode, result_shapes, operand_names, line))
+    return comps, entry
+
+
+_ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "clamp",
+    "floor", "ceil", "round-nearest-afz", "sign", "remainder",
+}
+_TRANSCENDENTAL_OPS = {"exponential", "log", "rsqrt", "sqrt", "tanh",
+                       "logistic", "power", "sine", "cosine",
+                       "exponential-minus-one", "log-plus-one", "erf"}
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "opt-barrier", "domain"}
+
+
+class _Analyzer:
+    def __init__(self, comps: dict):
+        self.comps = comps
+        self.cache: dict[str, Cost] = {}
+
+    def operand_bytes(self, comp: Computation, instr: Instruction) -> int:
+        total = 0
+        for nm in instr.operand_names:
+            shapes = comp.symbols.get(nm)
+            if shapes:
+                total += _shapes_bytes(shapes)
+        return total
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self.cache:
+            return self.cache[name]
+        self.cache[name] = Cost()  # cycle guard
+        comp = self.comps[name]
+        total = Cost()
+        for instr in comp.instructions:
+            total.add(self.instr_cost(comp, instr))
+        self.cache[name] = total
+        return total
+
+    def trip_count(self, cond_name: str) -> int:
+        cond = self.comps.get(cond_name)
+        if cond is None:
+            return 1
+        best = 1
+        for instr in cond.instructions:
+            for m in re.finditer(r"constant\((\d+)\)", instr.line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    def instr_cost(self, comp: Computation, instr: Instruction) -> Cost:
+        c = Cost()
+        op = instr.opcode
+        if op in _FREE_OPS:
+            return c
+        result_numel = sum(_numel(d) for _, d in instr.result_shapes)
+        result_bytes = _shapes_bytes(instr.result_shapes)
+        operand_bytes = self.operand_bytes(comp, instr)
+
+        if op == "dot":
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+            contract = 1
+            if m and instr.operand_names:
+                lhs = comp.symbols.get(instr.operand_names[0])
+                if lhs:
+                    dims = lhs[0][1]
+                    for ax in m.group(1).split(","):
+                        if ax and int(ax) < len(dims):
+                            contract *= dims[int(ax)]
+            c.flops += 2.0 * result_numel * contract
+            c.bytes += operand_bytes + result_bytes
+        elif op == "convolution":
+            kern = (comp.symbols.get(instr.operand_names[1])
+                    if len(instr.operand_names) > 1 else None)
+            k_numel = _numel(kern[0][1]) if kern else 1
+            c.flops += 2.0 * result_numel * max(k_numel // max(
+                result_numel and instr.result_shapes[0][1][-1], 1), 1)
+            c.bytes += operand_bytes + result_bytes
+        elif op == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", instr.line)
+            mc = re.search(r"condition=%?([\w.\-]+)", instr.line)
+            trips = self.trip_count(mc.group(1)) if mc else 1
+            if mb and mb.group(1) in self.comps:
+                c.add(self.comp_cost(mb.group(1)), times=trips)
+            if mc and mc.group(1) in self.comps:
+                c.add(self.comp_cost(mc.group(1)), times=trips)
+        elif op in ("call", "fusion", "map", "custom-call"):
+            m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", instr.line)
+            if m and m.group(1) in self.comps:
+                sub = self.comp_cost(m.group(1))
+                c.flops += sub.flops
+                c.transcendentals += sub.transcendentals
+                for k in _COLLECTIVES:
+                    c.coll_operand[k] += sub.coll_operand[k]
+                    c.coll_wire[k] += sub.coll_wire[k]
+                    c.coll_count[k] += sub.coll_count[k]
+            c.bytes += operand_bytes + result_bytes  # fusion boundary only
+        elif op == "conditional":
+            m = re.search(r"branch_computations=\{([^}]*)\}", instr.line)
+            best = Cost()
+            if m:
+                for nm in re.findall(r"%?([\w.\-]+)", m.group(1)):
+                    if nm in self.comps:
+                        sub = self.comp_cost(nm)
+                        if sub.flops >= best.flops:
+                            best = sub
+            c.add(best)
+            c.bytes += operand_bytes + result_bytes
+        elif any(op == k or op.startswith(k + "-") for k in _COLLECTIVES):
+            if not op.endswith("-done"):
+                # fraction of the payload that is fp32 and large (≥1MB):
+                # counted at half width in the bf16-equivalent metric
+                big_f32 = sum(
+                    _numel(d) * 4 for t, d in instr.result_shapes
+                    if t == "f32" and _numel(d) * 4 >= 2 ** 20)
+                for k in _COLLECTIVES:
+                    if op == k or op.startswith(k + "-"):
+                        c.coll_count[k] += 1
+                        c.coll_operand[k] += operand_bytes
+                        if k == "all-gather":
+                            wire = result_bytes
+                            corr = wire - big_f32 / 2
+                        elif k == "all-reduce":
+                            wire = 2.0 * result_bytes
+                            corr = wire - big_f32
+                        else:
+                            wire = operand_bytes
+                            of32 = sum(
+                                _numel(d) * 4
+                                for nm in instr.operand_names
+                                for t, d in comp.symbols.get(nm, [])
+                                if t == "f32" and _numel(d) * 4 >= 2 ** 20)
+                            corr = wire - of32 / 2
+                        c.coll_wire[k] += wire
+                        c.coll_wire_bf16[k] += max(corr, 0.0)
+                        break
+                c.bytes += operand_bytes + result_bytes
+        elif op in _TRANSCENDENTAL_OPS:
+            c.transcendentals += result_numel
+            c.flops += result_numel
+            c.bytes += operand_bytes + result_bytes
+        else:
+            if op in _ELEMENTWISE_FLOP_OPS or op in ("reduce", "scatter",
+                                                     "reduce-window"):
+                c.flops += result_numel
+            c.bytes += operand_bytes + result_bytes
+        return c
+
+
+def analyze(hlo_text: str, entry: Optional[str] = None) -> dict:
+    """Loop-aware cost of the entry computation. Returns plain dict."""
+    comps, found_entry = parse_hlo(hlo_text)
+    entry = entry or found_entry
+    if entry is None or entry not in comps:
+        candidates = [n for n in comps if n.startswith("main")]
+        entry = candidates[0] if candidates else next(iter(comps))
+    an = _Analyzer(comps)
+    cost = an.comp_cost(entry)
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "transcendentals": cost.transcendentals,
+        "collectives": {
+            "operand_bytes": dict(cost.coll_operand),
+            "wire_bytes": dict(cost.coll_wire),
+            "wire_bytes_bf16eq": dict(cost.coll_wire_bf16),
+            "counts": dict(cost.coll_count),
+            "total_operand_bytes": sum(cost.coll_operand.values()),
+            "total_wire_bytes": sum(cost.coll_wire.values()),
+            "total_wire_bytes_bf16eq": sum(cost.coll_wire_bf16.values()),
+        },
+    }

@@ -1,0 +1,28 @@
+"""Re-run hlo_analysis over saved .hlo.gz artifacts (no recompilation)."""
+import gzip
+import json
+import sys
+from pathlib import Path
+
+from repro.launch.dryrun import ARTIFACT_DIR
+from repro.launch.hlo_analysis import analyze
+
+
+def main():
+    for jpath in sorted(ARTIFACT_DIR.glob("*.json")):
+        hpath = jpath.with_suffix(".hlo.gz")
+        if not hpath.exists():
+            print(f"skip {jpath.name} (no HLO)")
+            continue
+        d = json.loads(jpath.read_text())
+        la = analyze(gzip.open(hpath, "rt").read())
+        d["collectives"] = la["collectives"]
+        d["flops_per_device"] = la["flops"]
+        d["hbm_bytes_per_device"] = la["bytes"]
+        d["transcendentals_per_device"] = la["transcendentals"]
+        jpath.write_text(json.dumps(d, indent=1))
+        print(f"reanalyzed {jpath.name}: flops/dev={la['flops']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,385 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block.
+
+The shared transformer block (attention + MLP, one set of weights) is
+applied every ``attn_every`` layers on ``concat(x, x0)`` (x0 = the embedding
+output), with a per-application LoRA delta on the qkv projections — the
+Zamba2 parameter-sharing trick (arXiv:2411.15242).
+
+Exercises two distinctive paths of the fused engine:
+  * shared weights — gradients accumulate across applications in the
+    backward-scan carry and are updated once per step;
+  * x0 rides in the scan carry so its gradient flows back to the embedding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+    attn_every: int = 6          # shared block applied at layers 0, 6, 12, …
+    lora_rank: int = 128
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def mamba_cfg(self) -> M2.Mamba2Config:
+        return M2.Mamba2Config(
+            name=self.name + "-mamba", n_layers=self.n_layers,
+            d_model=self.d_model, vocab=self.vocab, d_state=self.d_state,
+            d_conv=self.d_conv, expand=self.expand, headdim=self.headdim,
+            n_groups=self.n_groups, chunk=self.chunk, norm=self.norm,
+            dtype=self.dtype)
+
+    def n_attn_applications(self) -> int:
+        return len(range(0, self.n_layers, self.attn_every))
+
+    def param_count(self) -> int:
+        import math
+        shapes = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), self))
+        return sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+
+def init_params(key, cfg: HybridConfig) -> dict:
+    k_e, k_b, k_s, k_l = jax.random.split(key, 4)
+    mc = cfg.mamba_cfg()
+    d, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.dtype
+
+    outer = {
+        "tok_embed": L.embed_init(k_e, cfg.vocab, d, dtype=dt),
+        "final_norm": L.norm_init(d, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        outer["head"] = L.linear_init(k_e, d, cfg.vocab, dtype=dt)
+
+    # shared attention block: consumes concat(x, x0) -> d
+    ks = jax.random.split(k_s, 8)
+    shared = {
+        "in_ln": L.norm_init(2 * d, cfg.norm),
+        "wq": L.linear_init(ks[0], 2 * d, H * dh, dtype=dt),
+        "wk": L.linear_init(ks[1], 2 * d, K * dh, dtype=dt),
+        "wv": L.linear_init(ks[2], 2 * d, K * dh, dtype=dt),
+        "wo": L.linear_init(ks[3], H * dh, d, dtype=dt),
+        "mlp_ln": L.norm_init(d, cfg.norm),
+        "w_gate": L.linear_init(ks[4], d, cfg.d_ff, dtype=dt),
+        "w_up": L.linear_init(ks[5], d, cfg.d_ff, dtype=dt),
+        "w_down": L.linear_init(ks[6], cfg.d_ff, d, dtype=dt),
+    }
+
+    def block_init(k):
+        km, kl = jax.random.split(k)
+        r = cfg.lora_rank
+        return {
+            "mamba": M2._block_init(km, mc),
+            # LoRA deltas for the shared qkv (zero-init B side)
+            "lora_qA": L.linear_init(kl, 2 * d, r, dtype=dt),
+            "lora_qB": jnp.zeros((r, H * dh), dt),
+            "lora_kA": L.linear_init(jax.random.fold_in(kl, 1), 2 * d, r,
+                                     dtype=dt),
+            "lora_kB": jnp.zeros((r, K * dh), dt),
+            "lora_vA": L.linear_init(jax.random.fold_in(kl, 2), 2 * d, r,
+                                     dtype=dt),
+            "lora_vB": jnp.zeros((r, K * dh), dt),
+        }
+
+    blocks = jax.vmap(block_init)(jax.random.split(k_b, cfg.n_layers))
+    return {"outer": outer, "shared": shared, "stacks": {"blocks": blocks}}
+
+
+def _shared_attn(shared: dict, p: dict, cfg: HybridConfig, x: Array,
+                 x0: Array, pos: Array,
+                 cache=None, cur=None):
+    """Shared attention block on concat(x, x0) with per-layer LoRA.
+    Train path when cache is None; else single-token decode."""
+    B = x.shape[0]
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cat = jnp.concatenate([x, x0], axis=-1)
+    hN = L.norm_apply(shared["in_ln"], cat, kind=cfg.norm)
+    q = (L.dense(hN, shared["wq"])
+         + L.dense(L.dense(hN, p["lora_qA"]), p["lora_qB"]))
+    k = (L.dense(hN, shared["wk"])
+         + L.dense(L.dense(hN, p["lora_kA"]), p["lora_kB"]))
+    v = (L.dense(hN, shared["wv"])
+         + L.dense(L.dense(hN, p["lora_vA"]), p["lora_vB"]))
+    S = x.shape[1]
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, K, dh)
+    v = v.reshape(B, S, K, dh)
+    sin, cos = L.rope_sincos(pos, dh, cfg.rope_theta)
+    q = L.apply_rope(q, sin, cos)
+    k = L.apply_rope(k, sin, cos)
+    if cache is None:
+        # use_flash_vjp=False: this call sits inside the lax.cond of the
+        # hybrid block body; custom_vjp-in-cond trips a jax lowering-cache
+        # bug ("no constant handler for DynamicJaxprTracer").
+        o = L.attention(q, k, v, spec=L.MaskSpec(causal=True),
+                        q_pos=pos.astype(jnp.int32),
+                        kv_pos=pos.astype(jnp.int32), use_flash_vjp=False)
+        new_cache = None
+    else:
+        kc, vc, pos_tab = cache
+        W = kc.shape[1]
+        slot = jnp.mod(cur, W)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        o = L.decode_attention(q, kc, vc,
+                               kv_pos=jnp.broadcast_to(pos_tab[None], (B, W)),
+                               q_pos=jnp.full((B,), cur, jnp.int32))
+        new_cache = (kc, vc)
+    a = L.dense(o.reshape(B, S, H * dh), shared["wo"])
+    x = x + a
+    hM = L.norm_apply(shared["mlp_ln"], x, kind=cfg.norm)
+    x = x + L.glu_mlp({"w_gate": shared["w_gate"], "w_up": shared["w_up"],
+                       "w_down": shared["w_down"]}, hM)
+    return x, new_cache
+
+
+def make_block_body(cfg: HybridConfig):
+    mc = cfg.mamba_cfg()
+
+    def body(p, ctx, carry, idx):
+        shared, ctx_act = ctx
+        x, x0, aux = carry
+        pos = jax.lax.stop_gradient(ctx_act["pos"])
+        h = L.norm_apply(p["mamba"]["ln"], x, kind=cfg.norm)
+        x = x + M2.mamba2_mix(p["mamba"], mc, h)
+
+        def with_attn(operand):
+            x, x0 = operand
+            y, _ = _shared_attn(shared, p, cfg, x, x0, pos)
+            return y
+
+        x = jax.lax.cond(jnp.mod(idx, cfg.attn_every) == 0,
+                         with_attn, lambda o: o[0], (x, x0))
+        return (x, x0, aux)
+
+    return body
+
+
+def make_fused_spec(cfg: HybridConfig):
+    from repro.core.fused import FusedSpec
+    from repro.models.transformer import cross_entropy
+
+    def prologue(outer, batch):
+        x = outer["tok_embed"][batch["tokens"]]
+        return (x, x, jnp.zeros((), jnp.float32))
+
+    def pro_ctx(outer, batch):
+        S = batch["tokens"].shape[1]
+        return {"pos": jnp.arange(S, dtype=jnp.float32)}
+
+    def epilogue(outer, carry, batch):
+        x, _, aux = carry
+        h = L.norm_apply(outer["final_norm"], x, kind=cfg.norm)
+        w = (outer["tok_embed"].T if cfg.tie_embeddings else outer["head"])
+        logits = jnp.einsum("...d,dv->...v", h, w,
+                            preferred_element_type=jnp.float32)
+        loss_sum, ntok, correct = cross_entropy(logits, batch["labels"])
+        denom = jnp.maximum(ntok, 1).astype(jnp.float32)
+        loss = loss_sum / denom + aux
+        metrics = jax.lax.stop_gradient({
+            "loss": loss, "ntokens": ntok.astype(jnp.float32),
+            "accuracy": correct.astype(jnp.float32) / denom})
+        return loss, metrics
+
+    return FusedSpec(prologue=prologue,
+                     bodies={"blocks": make_block_body(cfg)},
+                     epilogue=epilogue, pro_ctx=pro_ctx)
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: HybridConfig, batch: int, max_len: int) -> dict:
+    """Mamba states are O(1); attention caches exist only for the layers
+    where the shared block applies (the hybrid's long-context advantage)."""
+    mc = cfg.mamba_cfg()
+    n_app = cfg.n_attn_applications()
+    K, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1,
+                           mc.conv_dim), cfg.dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, mc.n_heads, mc.headdim,
+                          mc.d_state), jnp.float32),
+        "attn_k": jnp.zeros((n_app, batch, max_len, K, dh), cfg.dtype),
+        "attn_v": jnp.zeros((n_app, batch, max_len, K, dh), cfg.dtype),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+        "cur": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_prefill_step(cfg: HybridConfig, max_len: Optional[int] = None):
+    """Full-sequence forward; extracts mamba final states + attn KV caches."""
+    mc = cfg.mamba_cfg()
+
+    def prefill_step(params, batch):
+        outer = params["outer"]
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        W = max_len or S
+        x0 = outer["tok_embed"][tokens]
+        x = x0
+        pos = jnp.arange(S, dtype=jnp.float32)
+        shared = params["shared"]
+        blocks = params["stacks"]["blocks"]
+        conv_list, ssm_list, k_list, v_list = [], [], [], []
+        H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        for lo in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[lo], blocks)
+            h = L.norm_apply(p["mamba"]["ln"], x, kind=cfg.norm)
+            # mamba mixer with state extraction
+            z = L.dense(h, p["mamba"]["in_proj"])
+            xBC, gate, dt = M2._split_proj(z, mc)
+            conv_list.append(xBC[:, S - (mc.d_conv - 1):])
+            xBC_c = L.ACTS["silu"](M2._causal_conv(
+                xBC, p["mamba"]["conv_w"], p["mamba"]["conv_b"]))
+            di, G, N = mc.d_inner, mc.n_groups, mc.d_state
+            xs_, Bm, Cm = jnp.split(xBC_c, [di, di + G * N], axis=-1)
+            dtf = jax.nn.softplus(dt.astype(jnp.float32)
+                                  + p["mamba"]["dt_bias"][None, None, :])
+            A = -jnp.exp(p["mamba"]["A_log"])
+            y, s_fin = M2.ssd_chunked(
+                xs_.reshape(B, S, mc.n_heads, mc.headdim).astype(jnp.float32),
+                dtf, A, Bm.reshape(B, S, G, N).astype(jnp.float32),
+                Cm.reshape(B, S, G, N).astype(jnp.float32),
+                p["mamba"]["D"], mc.chunk, return_state=True)
+            ssm_list.append(s_fin)
+            y = (y.reshape(B, S, di).astype(h.dtype)
+                 * L.ACTS["silu"](gate))
+            y = L.rmsnorm(y, p["mamba"]["out_norm"]["scale"])
+            x = x + L.dense(y, p["mamba"]["out_proj"])
+            if lo % cfg.attn_every == 0:
+                # shared attention + record its KV (padded to W)
+                cat = jnp.concatenate([x, x0], axis=-1)
+                hN = L.norm_apply(shared["in_ln"], cat, kind=cfg.norm)
+                kk = (L.dense(hN, shared["wk"])
+                      + L.dense(L.dense(hN, p["lora_kA"]), p["lora_kB"])
+                      ).reshape(B, S, K, dh)
+                vv = (L.dense(hN, shared["wv"])
+                      + L.dense(L.dense(hN, p["lora_vA"]), p["lora_vB"])
+                      ).reshape(B, S, K, dh)
+                sin, cos = L.rope_sincos(pos, dh, cfg.rope_theta)
+                kk = L.apply_rope(kk, sin, cos)
+                pad = ((0, 0), (0, W - S), (0, 0), (0, 0))
+                k_list.append(jnp.pad(kk, pad))
+                v_list.append(jnp.pad(vv, pad))
+                x, _ = _shared_attn(shared, p, cfg, x, x0, pos)
+        h = L.norm_apply(outer["final_norm"], x[:, -1:], kind=cfg.norm)
+        w = (outer["tok_embed"].T if cfg.tie_embeddings else outer["head"])
+        logits = jnp.einsum("...d,dv->...v", h, w,
+                            preferred_element_type=jnp.float32)[:, 0]
+        pos_tab = jnp.pad(jnp.arange(S, dtype=jnp.int32), (0, W - S),
+                          constant_values=-1)
+        cache = {"conv": jnp.stack(conv_list), "ssm": jnp.stack(ssm_list),
+                 "attn_k": jnp.stack(k_list), "attn_v": jnp.stack(v_list),
+                 "pos": pos_tab, "cur": jnp.asarray(S, jnp.int32)}
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: HybridConfig):
+    mc = cfg.mamba_cfg()
+
+    def decode_step(params, cache, batch):
+        outer = params["outer"]
+        x0 = outer["tok_embed"][batch["tokens"]]  # [B,1,d]
+        cur = cache["cur"]
+        shared = params["shared"]
+        W0 = cache["pos"].shape[0]
+        # mark the current slot before attention so the token sees itself
+        pos_tab = cache["pos"].at[jnp.mod(cur, W0)].set(cur)
+        n_layers = cfg.n_layers
+
+        # python loop over attn applications, scan over mamba spans between
+        x = x0
+        blocks = params["stacks"]["blocks"]
+        attn_i = 0
+        new_conv, new_ssm = [], []
+        new_k, new_v = [], []
+        for lo in range(0, n_layers, cfg.attn_every):
+            hi = min(lo + cfg.attn_every, n_layers)
+            span = jax.tree.map(lambda a: a[lo:hi], blocks)
+            conv_span = cache["conv"][lo:hi]
+            ssm_span = cache["ssm"][lo:hi]
+
+            def mbody(x, xs):
+                p, conv_s, ssm_s = xs
+                h = L.norm_apply(p["mamba"]["ln"], x, kind=cfg.norm)
+                y, conv_s, ssm_s = M2.mamba2_mix(p["mamba"], mc, h, conv_s,
+                                                 ssm_s, decode=True)
+                return x + y, (conv_s, ssm_s)
+
+            # shared attention first (applies at layer lo), then mamba span.
+            # order within the block body is mamba-then-attn; replicate:
+            # apply mamba for layer lo..hi with attn after layer lo's mamba.
+            p_lo = jax.tree.map(lambda a: a[lo], blocks)
+            h = L.norm_apply(p_lo["mamba"]["ln"], x, kind=cfg.norm)
+            y, conv_lo, ssm_lo = M2.mamba2_mix(
+                p_lo["mamba"], mc, h, cache["conv"][lo], cache["ssm"][lo],
+                decode=True)
+            x = x + y
+            x, (kc, vc) = _shared_attn(
+                shared, p_lo, cfg, x, x0,
+                cur[None].astype(jnp.float32),
+                cache=(cache["attn_k"][attn_i], cache["attn_v"][attn_i],
+                       pos_tab), cur=cur)
+            new_k.append(kc)
+            new_v.append(vc)
+            attn_i += 1
+            if hi > lo + 1:
+                rest = jax.tree.map(lambda a: a[lo + 1:hi], blocks)
+                x, (conv_r, ssm_r) = jax.lax.scan(
+                    mbody, x, (rest, cache["conv"][lo + 1:hi],
+                               cache["ssm"][lo + 1:hi]))
+                new_conv.append(jnp.concatenate([conv_lo[None], conv_r]))
+                new_ssm.append(jnp.concatenate([ssm_lo[None], ssm_r]))
+            else:
+                new_conv.append(conv_lo[None])
+                new_ssm.append(ssm_lo[None])
+
+        h = L.norm_apply(outer["final_norm"], x, kind=cfg.norm)
+        w = (outer["tok_embed"].T if cfg.tie_embeddings else outer["head"])
+        logits = jnp.einsum("...d,dv->...v", h, w,
+                            preferred_element_type=jnp.float32)[:, 0]
+        new_cache = {
+            "conv": jnp.concatenate(new_conv), "ssm": jnp.concatenate(new_ssm),
+            "attn_k": jnp.stack(new_k), "attn_v": jnp.stack(new_v),
+            "pos": pos_tab, "cur": cur + 1,
+        }
+        return logits, new_cache
+
+    return decode_step

@@ -1,0 +1,366 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060), scan-friendly.
+
+Implements the chunked SSD algorithm: within chunks of length Q the model
+computes the quadratic 'attention-like' form; across chunks a linear
+recurrence carries the SSM state.  This is the TPU-appropriate formulation
+(big einsums for the MXU + a short lax.scan across chunks) rather than the
+CUDA-style per-timestep selective scan.
+
+Decode is the O(1) recurrent update on the state (B, H, dh, ds) plus a
+rolling conv window — the reason the mamba2/zamba2 cells run long_500k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding.act import shard_act
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+    norm: str = "rmsnorm"
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    def param_count(self) -> int:
+        import math
+        shapes = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), self))
+        return sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+
+def _block_init(key, cfg: Mamba2Config) -> dict:
+    ks = jax.random.split(key, 4)
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    dt = cfg.dtype
+    d_in_proj = 2 * di + 2 * cfg.n_groups * cfg.d_state + H
+    return {
+        "ln": L.norm_init(d, cfg.norm),
+        "in_proj": L.linear_init(ks[0], d, d_in_proj, dtype=dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_dim, cfg.d_conv),
+                                     jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_norm": L.norm_init(di, "rmsnorm"),
+        "out_proj": L.linear_init(ks[3], di, d,
+                                  scale=(2 * cfg.n_layers) ** -0.5, dtype=dt),
+    }
+
+
+def init_params(key, cfg: Mamba2Config) -> dict:
+    k_e, k_b, k_h = jax.random.split(key, 3)
+    outer = {
+        "tok_embed": L.embed_init(k_e, cfg.vocab, cfg.d_model,
+                                  dtype=cfg.dtype),
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        outer["head"] = L.linear_init(k_h, cfg.d_model, cfg.vocab,
+                                      dtype=cfg.dtype)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg))(
+        jax.random.split(k_b, cfg.n_layers))
+    return {"outer": outer, "shared": {}, "stacks": {"blocks": blocks}}
+
+
+# --------------------------------------------------------------------------
+# Causal depthwise conv (kernel k, train form) and SSD chunked scan
+# --------------------------------------------------------------------------
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """x: [B,S,C]; w: [C,k] depthwise causal conv along S."""
+    k = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # sum_j x[t-k+1+j] * w[:, j]
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        out = out + xp[:, j:j + x.shape[1], :] * w[None, None, :, j]
+    return out + b[None, None, :]
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int,
+                init_state: Optional[Array] = None,
+                return_state: bool = False):
+    """Chunked SSD. Shapes:
+      x:  [B,S,H,P]  (P = headdim)     dt: [B,S,H]   A: [H] (negative)
+      Bm: [B,S,G,N]  Cm: [B,S,G,N]     D: [H]
+    Returns y [B,S,H,P] (and final state [B,H,P,N] if requested).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // Q
+    rep = H // G  # heads per B/C group
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, G, N)
+    Cc = Cm.reshape(Bsz, nc, Q, G, N)
+
+    dA = dtc * A[None, None, None, :]                  # [B,nc,Q,H] (negative)
+    cums = jnp.cumsum(dA, axis=2)                      # within-chunk cumsum
+    seg_end = cums[:, :, -1, :]                        # [B,nc,H]
+
+    # intra-chunk (quadratic) term: attention-like with decay mask
+    # L[b,c,h,i,j] = exp(cums_i - cums_j) for i >= j
+    diff = cums[:, :, :, None, :] - cums[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Ldec = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bcqgn,bckgn->bcqkg", Cc, Bc)      # [B,nc,Q,Q,G]
+    CB = jnp.repeat(CB, rep, axis=-1)                  # → H
+    att = CB * Ldec * dtc[:, :, None, :, :]            # scale by dt_j
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", att, xc)
+
+    # chunk-level states: S_c = sum_j exp(seg_end - cums_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(seg_end[:, :, None, :] - cums)   # [B,nc,Q,H]
+    w = decay_to_end * dtc                                   # [B,nc,Q,H]
+    Bh = jnp.repeat(Bc, rep, axis=-2)                        # [B,nc,Q,H,N]
+    chunk_state = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", w, Bh, xc)
+
+    # inter-chunk recurrence over nc chunks
+    seg_dec = jnp.exp(seg_end)                               # [B,nc,H]
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def scan_fn(s, inp):
+        st_c, dec_c = inp          # [B,H,P,N], [B,H]
+        s_out = s                  # state entering this chunk
+        s_new = s * dec_c[:, :, None, None] + st_c
+        return s_new, s_out
+
+    st_sw = jnp.moveaxis(chunk_state, 1, 0).astype(jnp.float32)
+    dec_sw = jnp.moveaxis(seg_dec, 1, 0)
+    s_final, s_in = jax.lax.scan(scan_fn, s0, (st_sw, dec_sw))
+    s_in = jnp.moveaxis(s_in, 0, 1)                          # [B,nc,H,P,N]
+
+    # inter-chunk contribution: y_j += C_j^T exp(cums_j) S_in
+    Ch = jnp.repeat(Cc, rep, axis=-2)                        # [B,nc,Q,H,N]
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch,
+                         s_in.astype(Ch.dtype), jnp.exp(cums))
+    y = (y_intra + y_inter).reshape(Bsz, nc * Q, H, P)[:, :S]
+    y = y + x.reshape(Bsz, nc * Q, H, P)[:, :S] * D[None, None, :, None]
+    if return_state:
+        return y, s_final
+    return y
+
+
+def _split_proj(z: Array, cfg: Mamba2Config):
+    di, G, N, H = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    zx, gate, dt = jnp.split(z, [di + 2 * G * N, 2 * di + 2 * G * N], -1)
+    xBC = zx
+    return xBC, gate, dt  # xBC: [.., di+2GN], gate: [.., di], dt: [.., H]
+
+
+def mamba2_mix(p: dict, cfg: Mamba2Config, h: Array,
+               conv_state: Optional[Array] = None,
+               ssm_state: Optional[Array] = None,
+               decode: bool = False):
+    """The mamba2 mixer. Train/prefill: full-sequence chunked SSD.
+    Decode (S==1): recurrent update; requires conv_state [B,k-1,C] and
+    ssm_state [B,H,P,N]; returns (y, new_conv_state, new_ssm_state)."""
+    B, S, _ = h.shape
+    di, G, N, H, P = (cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads,
+                      cfg.headdim)
+    z = shard_act(L.dense(h, p["in_proj"]), "ffn")
+    xBC, gate, dt = _split_proj(z, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])   # [B,S,H]
+    A = -jnp.exp(p["A_log"])                              # [H] negative
+
+    if not decode:
+        xBC = L.ACTS["silu"](_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+        x, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+        x = x.reshape(B, S, H, P)
+        Bm = Bm.reshape(B, S, G, N)
+        Cm = Cm.reshape(B, S, G, N)
+        y = ssd_chunked(x.astype(jnp.float32), dt, A,
+                        Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                        p["D"], cfg.chunk)
+        y = y.reshape(B, S, di).astype(h.dtype) * L.ACTS["silu"](gate)
+        y = L.rmsnorm(y, p["out_norm"]["scale"])
+        return shard_act(L.dense(y, p["out_proj"]), "hidden")
+
+    # ---- decode: one token ----
+    k = cfg.d_conv
+    xBC_new = xBC[:, 0]                                   # [B,C]
+    window = jnp.concatenate([conv_state, xBC_new[:, None]], axis=1)  # [B,k,C]
+    conv = jnp.sum(window * p["conv_w"].T[None], axis=1) + p["conv_b"]
+    xBC_t = L.ACTS["silu"](conv)                          # [B,C]
+    x, Bm, Cm = jnp.split(xBC_t, [di, di + G * N], axis=-1)
+    x = x.reshape(B, H, P).astype(jnp.float32)
+    Bm = Bm.reshape(B, G, N).astype(jnp.float32)
+    Cm = Cm.reshape(B, G, N).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)                      # [B,H,N]
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dt0 = dt[:, 0]                                        # [B,H]
+    dec = jnp.exp(dt0 * A[None])                          # [B,H]
+    s_new = (ssm_state * dec[:, :, None, None]
+             + jnp.einsum("bh,bhn,bhp->bhpn", dt0, Bh, x))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, s_new) + x * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(h.dtype) * L.ACTS["silu"](gate)
+    y = L.rmsnorm(y.reshape(B, 1, di), p["out_norm"]["scale"])
+    return (L.dense(y, p["out_proj"]), window[:, 1:], s_new)
+
+
+# --------------------------------------------------------------------------
+# Fused-engine spec + serve steps
+# --------------------------------------------------------------------------
+
+def make_block_body(cfg: Mamba2Config):
+    def body(p, ctx, carry, aux_idx):
+        del ctx, aux_idx
+        x, aux = carry
+        h = L.norm_apply(p["ln"], x, kind=cfg.norm)
+        x = x + mamba2_mix(p, cfg, h)
+        return (x, aux)
+
+    return body
+
+
+def make_fused_spec(cfg: Mamba2Config):
+    from repro.core.fused import FusedSpec
+    from repro.models.transformer import cross_entropy
+
+    def prologue(outer, batch):
+        return (outer["tok_embed"][batch["tokens"]],
+                jnp.zeros((), jnp.float32))
+
+    def epilogue(outer, carry, batch):
+        x, aux = carry
+        h = L.norm_apply(outer["final_norm"], x, kind=cfg.norm)
+        w = (outer["tok_embed"].T if cfg.tie_embeddings else outer["head"])
+        logits = jnp.einsum("...d,dv->...v", h, w,
+                            preferred_element_type=jnp.float32)
+        loss_sum, ntok, correct = cross_entropy(logits, batch["labels"])
+        denom = jnp.maximum(ntok, 1).astype(jnp.float32)
+        loss = loss_sum / denom + aux
+        metrics = jax.lax.stop_gradient({
+            "loss": loss, "ntokens": ntok.astype(jnp.float32),
+            "accuracy": correct.astype(jnp.float32) / denom})
+        return loss, metrics
+
+    return FusedSpec(prologue=prologue,
+                     bodies={"blocks": make_block_body(cfg)},
+                     epilogue=epilogue)
+
+
+def init_state_cache(cfg: Mamba2Config, batch: int) -> dict:
+    """Decode cache: conv window + SSM state per layer. O(1) in seq len."""
+    H, P, N = cfg.n_heads, cfg.headdim, cfg.d_state
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1,
+                           cfg.conv_dim), cfg.dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+        "cur": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_decode_step(cfg: Mamba2Config):
+    def decode_step(params, cache, batch):
+        outer = params["outer"]
+        x = outer["tok_embed"][batch["tokens"]]  # [B,1,d]
+
+        def body(x, xs):
+            p, conv_s, ssm_s = xs
+            h = L.norm_apply(p["ln"], x, kind=cfg.norm)
+            y, conv_s, ssm_s = mamba2_mix(p, cfg, h, conv_s, ssm_s,
+                                          decode=True)
+            return x + y, (conv_s, ssm_s)
+
+        (x), (conv_stk, ssm_stk) = jax.lax.scan(
+            body, x, (params["stacks"]["blocks"], cache["conv"],
+                      cache["ssm"]))
+        h = L.norm_apply(outer["final_norm"], x, kind=cfg.norm)
+        w = (outer["tok_embed"].T if cfg.tie_embeddings else outer["head"])
+        logits = jnp.einsum("...d,dv->...v", h, w,
+                            preferred_element_type=jnp.float32)[:, 0]
+        return logits, {"conv": conv_stk, "ssm": ssm_stk,
+                        "cur": cache["cur"] + 1}
+
+    return decode_step
+
+
+def make_prefill_step(cfg: Mamba2Config):
+    def prefill_step(params, batch):
+        outer = params["outer"]
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = outer["tok_embed"][tokens]
+
+        def body(x, p):
+            h = L.norm_apply(p["ln"], x, kind=cfg.norm)
+            # full mixer + extract final states for the cache
+            z = L.dense(h, p["in_proj"])
+            xBC, gate, dt = _split_proj(z, cfg)
+            conv_tail = xBC[:, S - (cfg.d_conv - 1):]      # pre-activation
+            xBC_c = L.ACTS["silu"](_causal_conv(xBC, p["conv_w"],
+                                                p["conv_b"]))
+            di, G, N, H, P = (cfg.d_inner, cfg.n_groups, cfg.d_state,
+                              cfg.n_heads, cfg.headdim)
+            xs_, Bm, Cm = jnp.split(xBC_c, [di, di + G * N], axis=-1)
+            dtf = jax.nn.softplus(dt.astype(jnp.float32)
+                                  + p["dt_bias"][None, None, :])
+            A = -jnp.exp(p["A_log"])
+            y, s_final = ssd_chunked(
+                xs_.reshape(B, S, H, P).astype(jnp.float32), dtf, A,
+                Bm.reshape(B, S, G, N).astype(jnp.float32),
+                Cm.reshape(B, S, G, N).astype(jnp.float32),
+                p["D"], cfg.chunk, return_state=True)
+            y = y.reshape(B, S, di).astype(h.dtype) * L.ACTS["silu"](gate)
+            y = L.rmsnorm(y, p["out_norm"]["scale"])
+            x = x + L.dense(y, p["out_proj"])
+            return x, (conv_tail, s_final)
+
+        x, (conv_stk, ssm_stk) = jax.lax.scan(
+            body, x, params["stacks"]["blocks"])
+        h = L.norm_apply(outer["final_norm"], x[:, -1:], kind=cfg.norm)
+        w = (outer["tok_embed"].T if cfg.tie_embeddings else outer["head"])
+        logits = jnp.einsum("...d,dv->...v", h, w,
+                            preferred_element_type=jnp.float32)[:, 0]
+        cache = {"conv": conv_stk, "ssm": ssm_stk,
+                 "cur": jnp.asarray(S, jnp.int32)}
+        return logits, cache
+
+    return prefill_step

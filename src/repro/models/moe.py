@@ -1,0 +1,259 @@
+"""Fine-grained Mixture-of-Experts FFN (DeepSeek-MoE / DeepSeek-V3 style).
+
+TPU-native dispatch: tokens are scattered into a per-expert capacity buffer
+``[B, E, C, d]`` (scatter-add over token rows — O(tokens·d), never a
+``[T, E, C]`` one-hot), experts run as one batched einsum, and results
+gather back.  Expert parallelism comes from sharding the E axis of both the
+buffer and the expert weights over the 'model'/'expert' mesh axis — XLA
+inserts the token→expert all-to-all at the sharding boundary.
+
+Capacity-based token dropping (GShard-style) keeps shapes static; dropped
+tokens fall through on the residual path.  The switch-style load-balance
+auxiliary loss is returned per call and accumulated through the scan carry
+(see models/transformer.py), which keeps it differentiable under the fused
+backward engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding.act import shard_act
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_routed: int                 # routed experts (E)
+    top_k: int
+    d_ff_expert: int              # fine-grained expert width
+    n_shared: int = 0             # always-on shared experts
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+    # deepseek-v3 uses sigmoid routing with normalized top-k weights
+    router_score: str = "softmax"  # or "sigmoid"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, *, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    E, f = cfg.n_routed, cfg.d_ff_expert
+    p = {
+        "router": L.linear_init(ks[0], d_model, E, dtype=jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d_model, f), jnp.float32)
+                   * d_model ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d_model, f), jnp.float32)
+                 * d_model ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, f, d_model), jnp.float32)
+                   * f ** -0.5).astype(dtype),
+    }
+    if cfg.n_shared:
+        fs = cfg.n_shared * f
+        p["shared_mlp"] = {
+            "w_gate": L.linear_init(ks[4], d_model, fs, dtype=dtype),
+            "w_up": L.linear_init(ks[5], d_model, fs, dtype=dtype),
+            "w_down": L.linear_init(ks[4], fs, d_model, dtype=dtype),
+        }
+    return p
+
+
+def capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
+    c = int(cfg.top_k * tokens_per_group * cfg.capacity_factor
+            / cfg.n_routed) + 1
+    return _round_up(max(c, 4), 4)
+
+
+def moe_ffn(params: dict, x: Array, cfg: MoEConfig
+            ) -> tuple[Array, Array]:
+    """MoE FFN dispatcher: explicit shard_map expert parallelism when a
+    mesh policy is installed (XLA SPMD cannot partition the batched
+    scatter/gather dispatch — it replicates the global batch, §Perf H6);
+    plain single-device path otherwise."""
+    from repro.sharding.act import current_policy
+    pol = current_policy()
+    if (pol is not None and pol.tp is not None
+            and cfg.n_routed % pol.tp_size == 0):
+        return _moe_ffn_shardmap(params, x, cfg, pol)
+    return _moe_ffn_local(params, x, cfg)
+
+
+def _moe_ffn_local(params: dict, x: Array, cfg: MoEConfig
+                   ) -> tuple[Array, Array]:
+    """x: [B, S, d] (B = token groups, sharded over data axis).
+
+    Returns (y, aux_loss).  Routing/dispatch per group of S tokens.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_routed, cfg.top_k
+    C = capacity(S, cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])  # fp32 routing
+    if cfg.router_score == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(scores, K)           # [B,S,K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)      # renormalize
+
+    # Load-balance aux loss (Switch/GShard): E * sum_e f_e * p_e
+    probs_mean = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=(0, 1))  # [E]
+    top1 = jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32)
+    frac_tokens = jnp.mean(top1, axis=(0, 1))
+    aux = cfg.router_aux_weight * E * jnp.sum(frac_tokens * probs_mean)
+
+    # Position of each (token, slot) within its expert's capacity buffer.
+    # Flatten slots in (s, k) order; cumulative count per expert via cumsum
+    # over a [S*K, E] one-hot — O(S·K·E) int work, no [T,E,C] tensor.
+    flat_idx = expert_idx.reshape(B, S * K)
+    oh = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)          # [B,SK,E]
+    pos_in_e = jnp.cumsum(oh, axis=1) - 1                      # [B,SK,E]
+    pos = jnp.take_along_axis(
+        pos_in_e, flat_idx[..., None], axis=-1)[..., 0]        # [B,SK]
+    keep = pos < C
+    slot = jnp.where(keep, pos, C).reshape(B, S, K)  # C = waste slot
+    idx_sk = expert_idx  # [B,S,K]
+
+    # Scatter tokens into [B, E, C+1, d]; one scatter per top-k slot so the
+    # token tensor is never repeated K times in HBM.
+    buf = jnp.zeros((B, E, C + 1, d), x.dtype)
+    b_ix = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S))
+    for k in range(K):
+        buf = buf.at[b_ix, idx_sk[:, :, k], slot[:, :, k]].add(
+            x, unique_indices=False)
+    # expert-parallel resharding boundary: token-sharded → expert-sharded
+    # (XLA inserts the all-to-all here)
+    buf = shard_act(buf[:, :, :C], "experts")  # [B,E,C,d]
+
+    # Expert computation — batched over E (shard E over the expert axis).
+    h = (L.ACTS["silu"](jnp.einsum("becd,edf->becf", buf, params["w_gate"]))
+         * jnp.einsum("becd,edf->becf", buf, params["w_up"]))
+    h = shard_act(h, "experts")
+    y_buf = shard_act(jnp.einsum("becf,efd->becd", h, params["w_down"]),
+                      "experts")
+    y_buf = jnp.pad(y_buf, ((0, 0), (0, 0), (0, 1), (0, 0)))  # waste slot = 0
+
+    # Gather back per slot and combine with gate weights.
+    keep_sk = keep.reshape(B, S, K)
+    y = jnp.zeros_like(x)
+    for k in range(K):
+        yk = y_buf[b_ix, idx_sk[:, :, k], slot[:, :, k]]       # [B,S,d]
+        w = (gate_vals[:, :, k] * keep_sk[:, :, k]).astype(yk.dtype)
+        y = y + yk * w[..., None]
+
+    if cfg.n_shared:
+        y = y + L.glu_mlp(params["shared_mlp"], x)
+    return y, aux
+
+
+# --------------------------------------------------------------------------
+# Explicit expert parallelism (shard_map): each model-axis rank owns
+# E/tp experts; tokens are all-gathered over the model axis (they arrive
+# sequence-sharded from the SP residual stream), each rank scatters only
+# the tokens routed to *its* experts, computes them, and the partial
+# outputs reduce-scatter straight back to the sequence-sharded layout.
+# All collectives are explicit, bf16, and O(B·S·d) per layer.
+# --------------------------------------------------------------------------
+
+def _moe_ffn_shardmap(params: dict, x: Array, cfg: MoEConfig, pol
+                      ) -> tuple[Array, Array]:
+    from jax.sharding import PartitionSpec as P
+
+    E, K = cfg.n_routed, cfg.top_k
+    tp_axis = pol.tp
+    tp = pol.tp_size
+    dp_spec = pol.dp
+    all_axes = tuple(pol.axes.batch) + (tp_axis,)
+    B, S, d = x.shape
+    seq_sharded = S % tp == 0
+
+    def local_moe(x_loc, router_w, w_gate, w_up, w_down):
+        # x_loc: [B_loc, S_loc, d]; expert weights: local shard [E_loc,...]
+        if seq_sharded:
+            x_full = jax.lax.all_gather(x_loc, tp_axis, axis=1, tiled=True)
+        else:
+            x_full = x_loc
+        Bl, Sf, _ = x_full.shape
+        logits = jnp.einsum("bsd,de->bse", x_full.astype(jnp.float32),
+                            router_w)
+        if cfg.router_score == "sigmoid":
+            scores = jax.nn.sigmoid(logits)
+        else:
+            scores = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_idx = jax.lax.top_k(scores, K)
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+        probs_mean = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=(0, 1))
+        top1 = jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32)
+        frac = jnp.mean(top1, axis=(0, 1))
+        # exact global load-balance loss: average the E-vectors first
+        probs_mean = jax.lax.pmean(probs_mean, all_axes)
+        frac = jax.lax.pmean(frac, all_axes)
+        aux = cfg.router_aux_weight * E * jnp.sum(frac * probs_mean)
+
+        # slot assignment across ALL experts (identical on every rank)
+        C = capacity(Sf, cfg)
+        flat_idx = expert_idx.reshape(Bl, Sf * K)
+        oh = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)
+        pos = jnp.take_along_axis(jnp.cumsum(oh, axis=1) - 1,
+                                  flat_idx[..., None], axis=-1)[..., 0]
+        keep = (pos < C).reshape(Bl, Sf, K)
+        slot = jnp.where(pos < C, pos, C).reshape(Bl, Sf, K)
+
+        # my expert range
+        r = jax.lax.axis_index(tp_axis)
+        E_loc = E // tp
+        idx_sk = expert_idx - r * E_loc     # local expert id, may be OOB
+        mine = (idx_sk >= 0) & (idx_sk < E_loc)
+        idx_cl = jnp.clip(idx_sk, 0, E_loc - 1)
+        slot_m = jnp.where(mine, slot, C)   # waste slot if not mine
+        buf = jnp.zeros((Bl, E_loc, C + 1, d), x_loc.dtype)
+        b_ix = jnp.broadcast_to(jnp.arange(Bl)[:, None], (Bl, Sf))
+        for k in range(K):
+            buf = buf.at[b_ix, idx_cl[:, :, k], slot_m[:, :, k]].add(x_full)
+        buf = buf[:, :, :C]
+
+        h = (L.ACTS["silu"](jnp.einsum("becd,edf->becf", buf, w_gate))
+             * jnp.einsum("becd,edf->becf", buf, w_up))
+        y_buf = jnp.einsum("becf,efd->becd", h, w_down)
+        y_buf = jnp.pad(y_buf, ((0, 0), (0, 0), (0, 1), (0, 0)))
+
+        y = jnp.zeros_like(x_full)
+        for k in range(K):
+            yk = y_buf[b_ix, idx_cl[:, :, k], slot_m[:, :, k]]
+            w = (gate_vals[:, :, k] * keep[:, :, k]
+                 * mine[:, :, k]).astype(yk.dtype)
+            y = y + yk * w[..., None]
+        # sum expert contributions across ranks; land sequence-sharded
+        if seq_sharded:
+            y = jax.lax.psum_scatter(y, tp_axis, scatter_dimension=1,
+                                     tiled=True)
+        else:
+            y = jax.lax.psum(y, tp_axis)
+        return y, aux
+
+    seq = tp_axis if seq_sharded else None
+    y, aux = jax.shard_map(
+        local_moe,
+        mesh=pol.mesh,
+        in_specs=(P(dp_spec, seq, None), P(None, None),
+                  P(tp_axis, None, None), P(tp_axis, None, None),
+                  P(tp_axis, None, None)),
+        out_specs=(P(dp_spec, seq, None), P()),
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"],
+      params["w_down"])
+
+    if cfg.n_shared:
+        y = y + L.glu_mlp(params["shared_mlp"], x)
+    return y, aux

@@ -1,0 +1,156 @@
+"""Architecture registry: ``--arch <id>`` → family functions + input specs.
+
+Each entry binds a config module to its family implementation and provides
+``input_specs`` / ``cache_specs`` ShapeDtypeStruct stand-ins for the dry-run
+(weak-type-correct, shardable, zero allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeSpec, cells_for
+
+SDS = jax.ShapeDtypeStruct
+
+_CONFIG_MODULES = {
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "h2o-danube-3-4b": "repro.configs.h2o_danube_3_4b",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "whisper-base": "repro.configs.whisper_base",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+}
+
+ARCH_IDS = tuple(_CONFIG_MODULES)
+
+
+@dataclasses.dataclass
+class Arch:
+    arch_id: str
+    family: str
+    cfg: Any
+
+    # ---- construction -----------------------------------------------------
+    def init_params(self, key):
+        return self._family_mod().init_params(key, self.cfg)
+
+    def _family_mod(self):
+        from repro.models import encdec, hybrid, mamba2, transformer
+        return {"transformer": transformer, "mamba2": mamba2,
+                "hybrid": hybrid, "encdec": encdec}[self.family]
+
+    # ---- train ------------------------------------------------------------
+    def make_fused_train_step(self, rule, *, residual_constraint=None,
+                              global_grad_norm=None, grad_constraint=None,
+                              param_constraint=None):
+        from repro.core.fused import fused_train_step
+        if self.family == "encdec":
+            from repro.models.encdec import make_fused_train_step
+            step = make_fused_train_step(self.cfg, rule)
+            return partial(step, residual_constraint=residual_constraint,
+                           grad_constraint=grad_constraint)
+        spec = self._family_mod().make_fused_spec(self.cfg)
+        if param_constraint is not None:
+            # ZeRO-3 'use' path: gather the layer's weights transiently
+            # (bf16), reduce-scatter their grads (custom vjp).
+            def wrap(body, pc):
+                return lambda p, c, x, aux: body(pc(p), c, x, aux)
+
+            spec = spec._replace(bodies={
+                name: wrap(b, param_constraint(name))
+                for name, b in spec.bodies.items()})
+
+        def train_step(params, opt_state, batch, *, lr):
+            return fused_train_step(
+                spec, rule, params, opt_state, batch, lr=lr,
+                residual_constraint=residual_constraint,
+                global_grad_norm=global_grad_norm,
+                grad_constraint=grad_constraint)
+
+        return train_step
+
+    def make_loss_fn(self):
+        """(params, batch) -> (loss, metrics), for jax.grad baselines."""
+        if self.family == "encdec":
+            from repro.models.encdec import loss_fn
+            return partial(loss_fn, self.cfg)
+        from repro.core.fused import unfused_loss_fn
+        spec = self._family_mod().make_fused_spec(self.cfg)
+        return partial(unfused_loss_fn, spec)
+
+    # ---- serve ------------------------------------------------------------
+    def make_prefill_step(self, **kw):
+        return self._family_mod().make_prefill_step(self.cfg, **kw)
+
+    def make_decode_step(self):
+        return self._family_mod().make_decode_step(self.cfg)
+
+    def init_cache(self, batch: int, max_len: int):
+        mod = self._family_mod()
+        if self.family == "mamba2":
+            return mod.init_state_cache(self.cfg, batch)
+        return mod.init_cache(self.cfg, batch, max_len)
+
+    # ---- dry-run specs ------------------------------------------------------
+    def supported_cells(self) -> list[str]:
+        cells = cells_for(self.arch_id)
+        return cells
+
+    def input_specs(self, shape_name: str) -> dict:
+        """ShapeDtypeStruct batch for the given assigned shape."""
+        sh = SHAPES[shape_name]
+        cfg = self.cfg
+        B = sh.global_batch
+        if sh.kind in ("train", "prefill"):
+            S = sh.seq_len
+            batch = {"tokens": SDS((B, S), jnp.int32)}
+            if sh.kind == "train":
+                batch["labels"] = SDS((B, S), jnp.int32)
+            if self.family == "encdec":
+                batch["frames"] = SDS((B, cfg.n_frames, cfg.d_model),
+                                      jnp.float32)
+            if getattr(cfg, "prefix_lm", False):
+                batch["prefix_embed"] = SDS((B, cfg.n_prefix_tokens,
+                                             cfg.d_model), jnp.float32)
+                batch["prefix_len"] = SDS((B,), jnp.int32)
+            if getattr(cfg, "mtp", False) and sh.kind == "train":
+                batch["labels_mtp"] = SDS((B, S), jnp.int32)
+            return batch
+        # decode: one new token against a seq_len-deep cache
+        return {"tokens": SDS((B, 1), jnp.int32)}
+
+    def cache_specs(self, shape_name: str) -> Any:
+        sh = SHAPES[shape_name]
+        assert sh.kind == "decode", shape_name
+        cache = jax.eval_shape(
+            lambda: self.init_cache(sh.global_batch, sh.seq_len))
+        return cache
+
+
+def get_arch(arch_id: str, *, smoke: bool = False) -> Arch:
+    mod = importlib.import_module(_CONFIG_MODULES[arch_id])
+    cfg = mod.smoke_config() if smoke else mod.config()
+    return Arch(arch_id=arch_id, family=mod.FAMILY, cfg=cfg)
+
+
+# --------------------------------------------------------------------------
+# The paper's own pre-training config (TinyLlama-1.1B, paper §4.3)
+# --------------------------------------------------------------------------
+
+def paper_llama_1b():
+    """LLaMA-architecture 1.1B used for the from-scratch C4 run (Fig. 4)."""
+    from repro.models.transformer import LMConfig
+    return Arch(
+        arch_id="llama-1.1b-paper", family="transformer",
+        cfg=LMConfig(name="llama-1.1b-paper", n_layers=22, d_model=2048,
+                     n_heads=32, n_kv_heads=4, d_ff=5632, vocab=32000))

@@ -1,0 +1,72 @@
+"""Batched serving engine: prefill once, decode greedily with a KV cache.
+
+Minimal but real: request batching with right-padding, jitted prefill and
+decode steps, greedy/temperature sampling, per-sequence stop handling.
+The decode step is the same function the dry-run lowers for the
+decode_32k / long_500k cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    max_len: int = 256
+    temperature: float = 0.0      # 0 = greedy
+    eos_id: int = -1              # -1 = never stop early
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, arch, params, scfg: ServeConfig):
+        self.arch = arch
+        self.params = params
+        self.scfg = scfg
+        self._prefill = jax.jit(arch.make_prefill_step())
+        self._decode = jax.jit(arch.make_decode_step(),
+                               donate_argnums=(1,))
+
+    def generate(self, prompts: list[list[int]], *,
+                 extras: Optional[dict] = None) -> list[list[int]]:
+        """prompts: batch of token-id lists (right-padded internally)."""
+        scfg = self.scfg
+        B = len(prompts)
+        Lmax = max(len(p) for p in prompts)
+        toks = np.zeros((B, Lmax), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p  # left-aligned; pad tail with 0
+        batch = {"tokens": jnp.asarray(toks)}
+        if extras:
+            batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+
+        logits, cache = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(scfg.seed)
+        out = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        tok = self._sample(logits, key)
+        for t in range(scfg.max_new_tokens):
+            for i in range(B):
+                if not done[i]:
+                    out[i].append(int(tok[i]))
+                    if int(tok[i]) == scfg.eos_id:
+                        done[i] = True
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": tok[:, None]})
+            key = jax.random.fold_in(key, t)
+            tok = self._sample(logits, key)
+        return out
+
+    def _sample(self, logits, key):
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)

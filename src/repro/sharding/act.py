@@ -1,0 +1,120 @@
+"""Activation-sharding policy: FSDP-SP discipline for pjit.
+
+Without intra-layer constraints, XLA SPMD propagation picks pathological
+strategies — the qwen3 baseline HLO double-gathers each MLP weight to a
+fully-replicated fp32 copy per use (EXPERIMENTS.md §Perf H1), and a
+Megatron-TP constraint set makes it worse (H2-refuted: per-layer fp32
+(B,S,d) all-reduce/all-gather pairs).  The scheme that wins on this
+hardware model is **FSDP + sequence parallelism**:
+
+  * the residual stream (and every [B,S,*] activation) stays
+    *sequence-sharded* over the model axis: P(dp, tp, …) — layer dots
+    contract unsharded dims, so no partial-sum all-reduces exist at all;
+  * layer weights are all-gathered **transiently, in bf16** per layer
+    (see rules.make_param_constraint) — classic ZeRO-3;
+  * attention runs sequence-tiled: every device owns S/tp query rows
+    against a replicated K/V (gathered once per layer, the only
+    activation collective).
+
+Models call :func:`shard_act(x, kind)` at canonical points; a no-op unless
+a policy is installed, so model code stays mesh-agnostic.
+
+Kinds:
+  hidden — residual stream [B,S,D]      → P(dp, tp, None)   (seq-sharded)
+  ffn    — MLP hidden [B,S,F]           → P(dp, tp, None)
+  heads  — q tensor [B,S,H,dh]          → P(dp, tp, None, None)
+  kv_full— k/v for attention [B,S,K,dh] → P(dp, None, None, None)
+  vocab  — logits [B,S,V] or [B,V]      → P(dp, None, tp) / P(dp, tp)
+  experts— MoE buffers [B,E,C,D]        → P(dp, tp, None, None)  (EP)
+"""
+from __future__ import annotations
+
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_POLICY: contextvars.ContextVar = contextvars.ContextVar(
+    "act_sharding_policy", default=None)
+
+
+class ActPolicy:
+    def __init__(self, mesh: Mesh, axes):
+        """axes: repro.sharding.rules.MeshAxes"""
+        self.mesh = mesh
+        self.axes = axes
+        self.dp = axes.batch if len(axes.batch) > 1 else (
+            axes.batch[0] if axes.batch else None)
+        self.tp = axes.tp[0] if axes.tp else None
+        self.dp_size = axes.size(axes.batch)
+        self.tp_size = axes.size(axes.tp)
+
+    def _ok(self, dim: int, size: int) -> bool:
+        return size > 1 and dim % size == 0 and dim > 1
+
+    def spec(self, x, kind: str) -> Optional[P]:
+        nd = x.ndim
+        s: list = [None] * nd
+        if nd >= 1 and self._ok(x.shape[0], self.dp_size):
+            s[0] = self.dp
+        if self.tp is None:
+            return P(*s)
+        if kind in ("hidden", "ffn", "heads") and nd >= 2:
+            if self._ok(x.shape[1], self.tp_size):
+                s[1] = self.tp           # sequence parallelism
+        elif kind == "q_tiled" and nd >= 2:
+            if x.shape[1] == self.tp_size:
+                s[1] = self.tp           # tile dim == tp axis
+        elif kind == "kv_full":
+            pass                          # replicated over tp by design
+        elif kind == "vocab" and nd >= 2:
+            if self._ok(x.shape[-1], self.tp_size):
+                s[-1] = self.tp
+        elif kind == "experts" and nd >= 2:
+            if self._ok(x.shape[1], self.tp_size):
+                s[1] = self.tp
+        return P(*s)
+
+
+def install(policy: Optional[ActPolicy]):
+    """Install (or clear with None) the process-wide policy."""
+    _POLICY.set(policy)
+
+
+def current_policy() -> Optional[ActPolicy]:
+    return _POLICY.get()
+
+
+class use_policy:
+    def __init__(self, policy: Optional[ActPolicy]):
+        self.policy = policy
+
+    def __enter__(self):
+        self.tok = _POLICY.set(self.policy)
+        return self.policy
+
+    def __exit__(self, *exc):
+        _POLICY.reset(self.tok)
+
+
+def shard_act(x, kind: str):
+    """Constrain activation sharding; identity when no policy installed."""
+    pol = _POLICY.get()
+    if pol is None or not hasattr(x, "ndim"):
+        return x
+    spec = pol.spec(x, kind)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol.mesh, spec))
+
+
+def seq_tiles(seq_len: int) -> int:
+    """Number of sequence tiles the attention q-scan should expose so the
+    scan axis stays *unsharded* while the tile axis carries the tp
+    sharding (layers._block_attention)."""
+    pol = _POLICY.get()
+    if pol is None or pol.tp is None:
+        return 1
+    return pol.tp_size if seq_len % pol.tp_size == 0 else 1

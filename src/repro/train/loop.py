@@ -1,0 +1,192 @@
+"""Training loop: fused (LOMO/AdaLomo) or unfused (AdamW/Adafactor) steps,
+LOMO-style microbatching, eval, checkpoint/resume, fault hooks.
+
+Microbatching note (DESIGN.md): classic gradient accumulation materializes
+the full gradient pytree — exactly what LOMO exists to avoid.  The fused
+path therefore does *sequential per-microbatch updates* (the paper trains
+with per-device batches small enough to fit, scaled out with ZeRO-3); the
+unfused path supports standard accumulation for the baselines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import optimizers as opt_lib
+from repro.core.fused import (apply_gradients_unfused, fused_train_step,
+                              init_fused_opt_state)
+from repro.train.fault import Heartbeat, StragglerMonitor, retrying
+from repro.train.schedules import constant, warmup_cosine
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    optimizer: str = "adalomo"
+    lr: float = 5e-4
+    total_steps: int = 100
+    warmup_frac: float = 0.03
+    schedule: str = "cosine"          # "cosine" | "constant"
+    fused: bool = True                # LOMO-style fused backward
+    microbatches: int = 1
+    eval_every: int = 0
+    ckpt_every: int = 0
+    ckpt_dir: Optional[str] = None
+    heartbeat_timeout_s: float = 0.0  # 0 = disabled
+    log_every: int = 10
+    opt_kwargs: dict = dataclasses.field(default_factory=dict)
+
+
+class Trainer:
+    """Drives one arch (from the registry) through training."""
+
+    def __init__(self, arch, tcfg: TrainConfig, *, mesh=None,
+                 log_fn: Callable[[str], None] = print):
+        self.arch = arch
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.log = log_fn
+        self.rule = opt_lib.get_rule(tcfg.optimizer, **tcfg.opt_kwargs)
+        self.lr_fn = (warmup_cosine(tcfg.lr, tcfg.total_steps,
+                                    tcfg.warmup_frac)
+                      if tcfg.schedule == "cosine" else constant(tcfg.lr))
+        self.straggler = StragglerMonitor()
+        self._build_step()
+
+    # ------------------------------------------------------------------
+    def _build_step(self):
+        tcfg = self.tcfg
+        if tcfg.fused:
+            step_fn = self.arch.make_fused_train_step(self.rule)
+
+            def one_step(params, opt_state, batch, lr):
+                return step_fn(params, opt_state, batch, lr=lr)
+
+            if tcfg.microbatches > 1:
+                inner = one_step
+
+                def one_step(params, opt_state, batch, lr):  # noqa: F811
+                    # LOMO-style: sequential updates per microbatch.
+                    mb = jax.tree.map(
+                        lambda x: x.reshape((tcfg.microbatches,
+                                             x.shape[0] // tcfg.microbatches)
+                                            + x.shape[1:]), batch)
+
+                    def body(carry, b):
+                        p, s = carry
+                        p, s, loss, metrics = inner(p, s, b, lr)
+                        return (p, s), (loss, metrics)
+
+                    (params, opt_state), (losses, metrics) = jax.lax.scan(
+                        body, (params, opt_state), mb)
+                    return (params, opt_state, losses.mean(),
+                            jax.tree.map(lambda m: m.mean(), metrics))
+
+            self._step = jax.jit(one_step, donate_argnums=(0, 1))
+        else:
+            loss_fn = self.arch.make_loss_fn()
+
+            def one_step(params, opt_state, batch, lr):
+                if tcfg.microbatches > 1:
+                    mb = jax.tree.map(
+                        lambda x: x.reshape((tcfg.microbatches,
+                                             x.shape[0] // tcfg.microbatches)
+                                            + x.shape[1:]), batch)
+
+                    def body(g_acc, b):
+                        (loss, metrics), g = jax.value_and_grad(
+                            loss_fn, has_aux=True)(params, b)
+                        return jax.tree.map(jnp.add, g_acc, g), (loss, metrics)
+
+                    g0 = jax.tree.map(jnp.zeros_like, params)
+                    grads, (losses, metrics) = jax.lax.scan(body, g0, mb)
+                    grads = jax.tree.map(
+                        lambda g: g / tcfg.microbatches, grads)
+                    loss = losses.mean()
+                    metrics = jax.tree.map(lambda m: m.mean(), metrics)
+                else:
+                    (loss, metrics), grads = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, batch)
+                params2, opt2 = apply_gradients_unfused(
+                    self.rule, params, grads, opt_state, lr=lr)
+                return params2, opt2, loss, metrics
+
+            self._step = jax.jit(one_step, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------
+    def init(self, seed: int = 0):
+        params = self.arch.init_params(jax.random.PRNGKey(seed))
+        opt_state = init_fused_opt_state(self.rule, params)
+        return params, opt_state
+
+    def fit(self, params, opt_state, batch_iter, *, start_step: int = 0,
+            eval_iter=None, ckpt_manager=None) -> dict:
+        tcfg = self.tcfg
+        history = {"step": [], "loss": [], "accuracy": [], "lr": [],
+                   "eval_loss": [], "eval_step": []}
+        hb = None
+        if tcfg.heartbeat_timeout_s > 0:
+            hb = Heartbeat(tcfg.heartbeat_timeout_s,
+                           on_stall=lambda: self.log("HEARTBEAT STALL"))
+            hb.start()
+
+        step_callable = retrying(
+            self._step,
+            on_failure=lambda a, e: self.log(f"step retry {a}: {e}"))
+
+        t_last = time.time()
+        for step in range(start_step, tcfg.total_steps):
+            batch = next(batch_iter)
+            batch = jax.tree.map(jnp.asarray, batch)
+            lr = self.lr_fn(step + 1)
+            params, opt_state, loss, metrics = step_callable(
+                params, opt_state, batch, lr)
+            dt = time.time() - t_last
+            t_last = time.time()
+            self.straggler.observe(step, dt)
+            if hb:
+                hb.beat()
+            if tcfg.log_every and (step % tcfg.log_every == 0
+                                   or step == tcfg.total_steps - 1):
+                self.log(f"step {step:5d} loss {float(loss):.4f} "
+                         f"acc {float(metrics['accuracy']):.3f} "
+                         f"lr {float(lr):.2e} ({dt*1e3:.0f} ms)")
+            history["step"].append(step)
+            history["loss"].append(float(loss))
+            history["accuracy"].append(float(metrics["accuracy"]))
+            history["lr"].append(float(lr))
+            if (eval_iter is not None and tcfg.eval_every
+                    and (step + 1) % tcfg.eval_every == 0):
+                ev = self.evaluate(params, eval_iter)
+                history["eval_loss"].append(ev["loss"])
+                history["eval_step"].append(step)
+                self.log(f"  eval loss {ev['loss']:.4f} "
+                         f"ppl {ev['ppl']:.2f} acc {ev['accuracy']:.3f}")
+            if (ckpt_manager is not None and tcfg.ckpt_every
+                    and (step + 1) % tcfg.ckpt_every == 0):
+                ckpt_manager.save(step + 1, (params, opt_state),
+                                  extra={"data_step": step + 1})
+        if hb:
+            hb.stop()
+        if ckpt_manager is not None:
+            ckpt_manager.wait()
+        return {"params": params, "opt_state": opt_state,
+                "history": history}
+
+    def evaluate(self, params, eval_iter, n_batches: int = 4) -> dict:
+        loss_fn = getattr(self, "_eval_fn", None)
+        if loss_fn is None:
+            loss_fn = jax.jit(self.arch.make_loss_fn())
+            self._eval_fn = loss_fn
+        tot, acc = 0.0, 0.0
+        for _ in range(n_batches):
+            batch = jax.tree.map(jnp.asarray, next(eval_iter))
+            loss, metrics = loss_fn(params, batch)
+            tot += float(loss)
+            acc += float(metrics["accuracy"])
+        tot /= n_batches
+        return {"loss": tot, "ppl": float(jnp.exp(tot)),
+                "accuracy": acc / n_batches}

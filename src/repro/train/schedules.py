@@ -1,0 +1,26 @@
+"""LR schedules (paper Appendix C/D: warmup = 0.03·total, cosine decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, total_steps: int,
+                  warmup_frac: float = 0.03, min_ratio: float = 0.1):
+    warmup = max(int(total_steps * warmup_frac), 1)
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / warmup
+        t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos).astype(jnp.float32)
+
+    return lr
+
+
+def constant(base_lr: float):
+    def lr(step):
+        return jnp.asarray(base_lr, jnp.float32)
+
+    return lr

@@ -1,0 +1,116 @@
+"""Distribution checks that need >1 device — run via subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (device count locks at
+first jax import, so these cannot share the main pytest process)."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_bits(arch_id="h2o-danube-1.8b"):
+    from repro.core import optimizers as opt_lib
+    from repro.core.fused import init_fused_opt_state
+    from repro.models.registry import get_arch
+    arch = get_arch(arch_id, smoke=True)
+    rule = opt_lib.get_rule("adalomo")
+    key = jax.random.PRNGKey(0)
+    params = arch.init_params(key)
+    opt_state = init_fused_opt_state(rule, params)
+    batch = {"tokens": jax.random.randint(key, (8, 32), 0, arch.cfg.vocab),
+             "labels": jax.random.randint(key, (8, 32), 0, arch.cfg.vocab)}
+    return arch, rule, params, opt_state, batch
+
+
+def test_sharded_step_matches_single_device():
+    """pjit-sharded fused train step == single-device result."""
+    from repro.launch.mesh import make_test_mesh
+    from repro.sharding import rules as R
+    arch, rule, params, opt_state, batch = make_bits()
+    step = arch.make_fused_train_step(rule)
+    fn = lambda p, s, b: step(p, s, b, lr=jnp.float32(1e-3))  # noqa: E731
+
+    p1, s1, loss1, _ = jax.jit(fn)(params, opt_state, batch)
+
+    mesh = make_test_mesh(8)
+    axes = R.MeshAxes(mesh)
+    p_sh = R.to_shardings(R.param_pspecs(params, axes), mesh)
+    o_sh = R.to_shardings(
+        R.opt_pspecs(opt_state, params, R.param_pspecs(params, axes), axes),
+        mesh)
+    b_sh = R.to_shardings(R.batch_pspecs(batch, axes), mesh)
+    with mesh:
+        params_s = jax.device_put(params, p_sh)
+        opt_s = jax.device_put(opt_state, o_sh)
+        batch_s = jax.device_put(batch, b_sh)
+        p2, s2, loss2, _ = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh))(
+            params_s, opt_s, batch_s)
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=1e-5)
+    print("SHARDED_MATCH_OK")
+
+
+def test_elastic_restore():
+    """Checkpoint saved from an 8-device mesh restores onto a 4-device mesh
+    (simulated pod loss) and onto a single device."""
+    import tempfile
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.launch.mesh import _mk
+    from repro.sharding import rules as R
+    arch, rule, params, opt_state, batch = make_bits()
+    mesh8 = _mk((4, 2), ("data", "model"))
+    axes8 = R.MeshAxes(mesh8)
+    p_specs = R.param_pspecs(params, axes8)
+    p_sh8 = R.to_shardings(p_specs, mesh8)
+    params8 = jax.device_put(params, p_sh8)
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_write=False)
+        mgr.save(5, params8)
+        # restore onto a *different* mesh: 4 devices
+        devs = np.array(jax.devices()[:4]).reshape(2, 2)
+        mesh4 = jax.sharding.Mesh(devs, ("data", "model"))
+        p_sh4 = R.to_shardings(R.param_pspecs(params, R.MeshAxes(mesh4)),
+                               mesh4)
+        step, p4, _ = mgr.restore(template=params, shardings=p_sh4)
+        assert step == 5
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p4)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=0, atol=0)
+        # and onto a single device (no shardings)
+        _, p1, _ = mgr.restore(template=params)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p1)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    print("ELASTIC_OK")
+
+
+def test_multipod_mesh_compiles():
+    """Tiny multi-pod mesh (2,2,2): the pod axis shards the batch."""
+    from repro.launch.mesh import make_test_mesh
+    from repro.sharding import rules as R
+    arch, rule, params, opt_state, batch = make_bits()
+    step = arch.make_fused_train_step(rule)
+    fn = lambda p, s, b: step(p, s, b, lr=jnp.float32(1e-3))  # noqa: E731
+    mesh = make_test_mesh(8, multi_pod=True)
+    axes = R.MeshAxes(mesh)
+    assert axes.batch == ("pod", "data")
+    p_sh = R.to_shardings(R.param_pspecs(params, axes), mesh)
+    o_sh = R.to_shardings(R.opt_pspecs(
+        opt_state, params, R.param_pspecs(params, axes), axes), mesh)
+    b_sh = R.to_shardings(R.batch_pspecs(batch, axes), mesh)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh)).lower(
+            params, opt_state, batch).compile()
+    assert compiled is not None
+    print("MULTIPOD_OK")
+
+
+if __name__ == "__main__":
+    name = sys.argv[1]
+    globals()[name]()
