@@ -18,6 +18,7 @@ MODULES = [
     "fig5_profile",         # Figure 5 / Table 8: memory + throughput
     "appb_gradnorm",        # Appendix B: ± gradient normalization
     "roofline",             # §Roofline from the dry-run artifacts
+    "serve_throughput",     # paged continuous batching vs static batching
 ]
 
 

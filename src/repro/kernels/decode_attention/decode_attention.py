@@ -60,6 +60,104 @@ def _decode_kernel(scal_ref, q_ref, k_ref, v_ref, pos_ref, out_ref,
         out_ref[0, 0] = out.astype(out_ref.dtype)
 
 
+def _paged_decode_kernel(bt_ref, sl_ref, scal_ref, q_ref, k_ref, v_ref,
+                         out_ref, m_ref, l_ref, acc_ref):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+    scale, window = scal_ref[0], scal_ref[1]
+    n = sl_ref[b]                                        # tokens in cache
+    ps = k_ref.shape[1]
+
+    @pl.when(pi == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # pages wholly past the sequence end contribute nothing — skip them
+    @pl.when(pi * ps < n)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)              # [G, dh]
+        k = k_ref[0, :, 0].astype(jnp.float32)           # [ps, dh]
+        v = v_ref[0, :, 0].astype(jnp.float32)           # [ps, dh]
+        pos = (pi * ps
+               + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1))[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        valid = pos < n
+        valid = valid & jnp.where(window > 0,
+                                  (n - 1) - pos < window, True)
+        s = jnp.where(valid[None, :], s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_ref[:, 0] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jnp.dot(p, v, preferred_element_type=jnp.float32))
+        m_ref[...] = m_new[:, None]
+        l_ref[...] = l_new[:, None]
+
+    @pl.when(pi == n_pages - 1)
+    def _():
+        out = acc_ref[...] / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        out_ref[0, 0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention_pallas(q, k_pages, v_pages, block_tables,
+                                  seq_lens, *, scale=None, window=None,
+                                  interpret=False):
+    """Paged flash-decoding: each sequence reads its own page list.
+
+    q: [B,H,dh]; k_pages/v_pages: [N, ps, K, dh] (page pool shared across
+    sequences); block_tables: [B,P] int32 page ids in logical order
+    (unallocated tail entries must point at a valid page, e.g. the scratch
+    page 0 — they are masked by seq_lens); seq_lens: [B] int32 token counts
+    *including* the token written this step.  Returns [B,H,dh].
+
+    Grid (B, K, P): the block table is scalar-prefetched so the K/V
+    BlockSpec index_map can route each grid step's DMA to the right page —
+    the gather never materializes a per-sequence contiguous cache.
+    """
+    B, H, dh = q.shape
+    N, ps, K, _ = k_pages.shape
+    P = block_tables.shape[1]
+    G = H // K
+    scale = scale if scale is not None else dh ** -0.5
+    qg = q.reshape(B, K, G, dh)
+    scal = jnp.array([scale, float(window or 0)], jnp.float32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, P),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, dh), lambda b, k, p, bt, sl: (b, k, 0, 0)),
+            pl.BlockSpec((1, ps, 1, dh),
+                         lambda b, k, p, bt, sl: (bt[b, p], 0, k, 0)),
+            pl.BlockSpec((1, ps, 1, dh),
+                         lambda b, k, p, bt, sl: (bt[b, p], 0, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh),
+                               lambda b, k, p, bt, sl: (b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        _paged_decode_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, dh), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      scal, qg, k_pages, v_pages)
+    return out.reshape(B, H, dh)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("window", "kv_block", "interpret"))
 def decode_attention_pallas(q, k_cache, v_cache, kv_pos, q_pos, *,

@@ -14,3 +14,23 @@ def decode_attention_ref(q, k_cache, v_cache, *, kv_pos, q_pos,
     out = decode_attention(q[:, None], k_cache, v_cache, kv_pos=kv_pos,
                            q_pos=q_pos, window=window, scale=scale)
     return out[:, 0]
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, seq_lens,
+                               *, window=None, scale=None):
+    """Dense oracle for the paged kernel: gather each sequence's pages into
+    a contiguous cache and run the exact serving-path attention.
+
+    q: [B,H,dh]; k_pages/v_pages: [N, ps, K, dh]; block_tables: [B,P];
+    seq_lens: [B] (counts include the current token). Returns [B,H,dh]."""
+    B = q.shape[0]
+    _, ps, K, dh = k_pages.shape
+    P = block_tables.shape[1]
+    kc = k_pages[block_tables].reshape(B, P * ps, K, dh)
+    vc = v_pages[block_tables].reshape(B, P * ps, K, dh)
+    pos = jnp.arange(P * ps, dtype=jnp.int32)
+    kv_pos = jnp.where(pos[None, :] < seq_lens[:, None], pos[None, :], -1)
+    q_pos = jnp.maximum(seq_lens - 1, 0).astype(jnp.int32)
+    out = decode_attention(q[:, None], kc, vc, kv_pos=kv_pos, q_pos=q_pos,
+                           window=window, scale=scale)
+    return out[:, 0]

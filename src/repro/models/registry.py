@@ -101,6 +101,26 @@ class Arch:
             return mod.init_state_cache(self.cfg, batch)
         return mod.init_cache(self.cfg, batch, max_len)
 
+    # ---- paged serving (continuous batching; transformer GQA only) --------
+    def supports_paged_serving(self) -> bool:
+        return (self.family == "transformer"
+                and getattr(self.cfg, "mla", None) is None
+                and not getattr(self.cfg, "prefix_lm", False))
+
+    def make_prefill_kv_step(self):
+        assert self.supports_paged_serving(), self.arch_id
+        return self._family_mod().make_prefill_kv_step(self.cfg)
+
+    def make_paged_decode_step(self, *, use_kernel=None, interpret=False):
+        assert self.supports_paged_serving(), self.arch_id
+        return self._family_mod().make_paged_decode_step(
+            self.cfg, use_kernel=use_kernel, interpret=interpret)
+
+    def init_page_pool(self, num_pages: int, page_size: int):
+        assert self.supports_paged_serving(), self.arch_id
+        return self._family_mod().init_page_pool(self.cfg, num_pages,
+                                                 page_size)
+
     # ---- dry-run specs ------------------------------------------------------
     def supported_cells(self) -> list[str]:
         cells = cells_for(self.arch_id)

@@ -508,6 +508,141 @@ def make_decode_step(cfg: LMConfig):
     return decode_step
 
 
+# --------------------------------------------------------------------------
+# Paged serving: prefill emits full per-layer K/V; decode reads/writes a
+# shared page pool through per-sequence block tables (serve/paging.py).
+# --------------------------------------------------------------------------
+
+def make_prefill_kv_step(cfg: LMConfig):
+    """prefill(params, batch{'tokens': [B,S], 'length': [B]}) ->
+    (logits [B,vocab] at position length-1, k [L,B,S,K,dh], v [L,B,S,K,dh]).
+
+    Unlike :func:`make_prefill_step` this keeps the *full* per-layer K/V
+    (no ring truncation) so the engine can scatter it into KV pages; SWA is
+    enforced by the decode-attention mask instead of cache truncation.
+    Right-padding is harmless: with a causal mask, K/V at positions < length
+    never see the pad tail, and logits are gathered at length-1."""
+    assert cfg.mla is None, "paged serving supports GQA caches only"
+    assert not cfg.prefix_lm, "paged serving: prefix-LM not plumbed yet"
+
+    def prefill(params, batch):
+        outer = params["outer"]
+        tokens = batch["tokens"]
+        length = batch["length"].astype(jnp.int32)
+        B, S = tokens.shape
+        x = _embed(outer, cfg, tokens)
+        pos = jnp.arange(S, dtype=jnp.int32)
+        body_train = make_block_body(cfg)
+
+        def body(carry, layer_p):
+            x, aux = carry
+            ctx = ({}, {"pos": pos.astype(jnp.float32)})
+            x2, aux2 = body_train(layer_p, ctx, (x, aux), 0)
+            h = L.norm_apply(layer_p["ln1"], x, kind=cfg.norm)
+            K, dh = cfg.n_kv_heads, cfg.head_dim
+            k = L.dense(h, layer_p["attn"]["wk"]).reshape(B, S, K, dh)
+            if cfg.qk_norm:
+                k = L.rmsnorm(k, layer_p["attn"]["k_norm"]["scale"])
+            d_rot = int(dh * cfg.rope_pct) // 2 * 2
+            sin, cos = L.rope_sincos(pos.astype(jnp.float32), d_rot,
+                                     cfg.rope_theta)
+            k = L.apply_rope(k, sin, cos, cfg.rope_pct)
+            v = L.dense(h, layer_p["attn"]["wv"]).reshape(B, S, K, dh)
+            return (x2, aux2), (k, v)
+
+        (x, _), (k_stk, v_stk) = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            params["stacks"]["blocks"])
+        x_last = jnp.take_along_axis(
+            x, jnp.maximum(length - 1, 0)[:, None, None], axis=1)
+        h = L.norm_apply(outer["final_norm"], x_last, kind=cfg.norm)
+        logits = _logits(outer, cfg, h)[:, 0]
+        return logits, k_stk, v_stk
+
+    return prefill
+
+
+def make_paged_decode_step(cfg: LMConfig, *, use_kernel=None,
+                           interpret=False):
+    """decode(params, pages, batch) -> (logits [B,vocab], new pages).
+
+    pages: {'k','v': [L, N, ps, K, dh]} — the shared page pool.
+    batch: tokens [B,1]; block_tables [B,P] (page ids, logical order,
+    unallocated tail = scratch page 0); seq_lens [B] tokens already cached
+    (== position of the incoming token); emit [B] bool — rows that are
+    live this step.  Frozen rows write their K/V to the scratch page and
+    their logits are garbage by construction; the engine masks them."""
+    assert cfg.mla is None, "paged serving supports GQA caches only"
+    from repro.kernels.decode_attention.ops import paged_decode_attention
+
+    def decode(params, pages, batch):
+        outer = params["outer"]
+        tokens = batch["tokens"]
+        bt = batch["block_tables"].astype(jnp.int32)
+        n = batch["seq_lens"].astype(jnp.int32)            # [B]
+        emit = batch["emit"]
+        B = tokens.shape[0]
+        ps = pages["k"].shape[2]
+        H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+        x = _embed(outer, cfg, tokens)                     # [B,1,d]
+        # page/slot the incoming token lands in; frozen rows -> scratch 0
+        pidx = jnp.where(emit, bt[jnp.arange(B), n // ps], 0)
+        slot = jnp.where(emit, n % ps, 0)
+        n_incl = n + 1                                     # incl. this token
+        posv = n.astype(jnp.float32)[:, None]              # [B,1]
+        d_rot = int(dh * cfg.rope_pct) // 2 * 2
+        sin, cos = L.rope_sincos(posv, d_rot, cfg.rope_theta)
+        aux0 = jnp.zeros((), jnp.float32)
+
+        def body(carry, xs):
+            x, _ = carry
+            layer_p, kp, vp = xs
+            h = L.norm_apply(layer_p["ln1"], x, kind=cfg.norm)
+            q = L.dense(h, layer_p["attn"]["wq"]).reshape(B, 1, H, dh)
+            k = L.dense(h, layer_p["attn"]["wk"]).reshape(B, 1, K, dh)
+            v = L.dense(h, layer_p["attn"]["wv"]).reshape(B, 1, K, dh)
+            if cfg.qk_norm:
+                q = L.rmsnorm(q, layer_p["attn"]["q_norm"]["scale"])
+                k = L.rmsnorm(k, layer_p["attn"]["k_norm"]["scale"])
+            q = L.apply_rope(q, sin, cos, cfg.rope_pct)
+            k = L.apply_rope(k, sin, cos, cfg.rope_pct)
+            kp = kp.at[pidx, slot].set(k[:, 0])
+            vp = vp.at[pidx, slot].set(v[:, 0])
+            o = paged_decode_attention(q, kp, vp, bt, n_incl,
+                                       window=cfg.window,
+                                       use_kernel=use_kernel,
+                                       interpret=interpret)
+            a = L.dense(o.reshape(B, 1, H * dh), layer_p["attn"]["wo"])
+            x = x + a
+            h = L.norm_apply(layer_p["ln2"], x, kind=cfg.norm)
+            if cfg.moe is not None:
+                y, _ = moe_ffn(layer_p["moe"], h, cfg.moe)
+                x = x + y
+            elif cfg.glu:
+                x = x + L.glu_mlp(layer_p["mlp"], h, cfg.act)
+            else:
+                x = x + L.mlp(layer_p["mlp"], h, cfg.act)
+            return (x, aux0), (kp, vp)
+
+        xs = (params["stacks"]["blocks"], pages["k"], pages["v"])
+        (x, _), (k_new, v_new) = jax.lax.scan(body, (x, aux0), xs)
+        h = L.norm_apply(outer["final_norm"], x, kind=cfg.norm)
+        logits = _logits(outer, cfg, h)[:, 0]
+        return logits, {"k": k_new, "v": v_new}
+
+    return decode
+
+
+def init_page_pool(cfg: LMConfig, num_pages: int, page_size: int) -> dict:
+    """Zeroed shared KV page pool (page 0 is the engine's scratch page)."""
+    assert cfg.mla is None, "paged serving supports GQA caches only"
+    shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.dtype),
+            "v": jnp.zeros(shape, cfg.dtype)}
+
+
 def make_prefill_step(cfg: LMConfig):
     """prefill_step(params, batch) -> (last_logits, cache). Computes the
     full-sequence forward and materializes the KV cache for decoding."""

@@ -1,0 +1,112 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (offline fallback).
+
+The real hypothesis cannot be installed in the air-gapped CI image, but the
+property tests only use a tiny slice of its API: ``@given`` with keyword
+strategies, ``@settings(max_examples=..., deadline=...)``, and the
+``integers`` / ``floats`` / ``booleans`` / ``sampled_from`` strategies.
+
+This shim replays ``max_examples`` pseudo-random draws from a seeded
+``np.random.RandomState`` (seed derived from the test name, so runs are
+reproducible and independent of collection order).  On failure it re-raises
+with the drawn example attached, mirroring hypothesis's falsifying-example
+report.  Semantics match hypothesis closely enough for these tests: every
+draw is inside the declared bounds and the full example set is deterministic.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn, desc):
+        self._draw = draw_fn
+        self._desc = desc
+
+    def draw(self, rng: np.random.RandomState):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"st.{self._desc}"
+
+
+class strategies:
+    """Namespace mirror of ``hypothesis.strategies`` (``import ... as st``)."""
+
+    @staticmethod
+    def integers(min_value, max_value) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: int(rng.randint(min_value, max_value + 1)),
+            f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def floats(min_value, max_value) -> SearchStrategy:
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(rng):
+            # log-uniform when the range spans orders of magnitude, like
+            # hypothesis's biased float generation; plain uniform otherwise.
+            if lo > 0 and hi / lo > 1e3:
+                return float(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+            return float(rng.uniform(lo, hi))
+
+        return SearchStrategy(draw, f"floats({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda rng: bool(rng.randint(2)), "booleans()")
+
+    @staticmethod
+    def sampled_from(elements) -> SearchStrategy:
+        elements = list(elements)
+        return SearchStrategy(
+            lambda rng: elements[rng.randint(len(elements))],
+            f"sampled_from({elements})")
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator recording run options; composes with @given either way."""
+
+    def deco(fn):
+        fn._stub_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    """Run the test once per drawn example, deterministically seeded."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            opts = (getattr(wrapper, "_stub_settings", None)
+                    or getattr(fn, "_stub_settings", None)
+                    or {"max_examples": DEFAULT_MAX_EXAMPLES})
+            seed = zlib.adler32(fn.__name__.encode()) & 0x7FFFFFFF
+            rng = np.random.RandomState(seed)
+            for i in range(opts["max_examples"]):
+                example = {k: s.draw(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **example, **kwargs)
+                except Exception as e:  # pragma: no cover - failure path
+                    raise AssertionError(
+                        f"Falsifying example (stub, draw {i}): "
+                        f"{fn.__name__}({example})") from e
+
+        # strategy kwargs are supplied by the draw loop, not pytest fixtures
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        params = [p for name, p in
+                  inspect.signature(fn).parameters.items()
+                  if name not in strats]
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+
+    return deco

@@ -1,0 +1,13 @@
+"""Test-suite bootstrap: make the offline hypothesis shim importable.
+
+The CI image has no network, so ``hypothesis`` may be absent.  Property
+tests import it via ``try: from hypothesis import ...`` with a fallback to
+``hypothesis_stub`` — this conftest puts ``tests/_compat`` on sys.path so
+that fallback resolves regardless of how pytest was invoked.
+"""
+import os
+import sys
+
+_COMPAT = os.path.join(os.path.dirname(__file__), "_compat")
+if _COMPAT not in sys.path:
+    sys.path.insert(0, _COMPAT)

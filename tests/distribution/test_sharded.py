@@ -1,5 +1,6 @@
 """Multi-device distribution tests (subprocess: device count locks at
 first jax import, so each case runs in its own interpreter)."""
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -11,22 +12,29 @@ REPO = Path(__file__).resolve().parents[2]
 
 
 def _run(case: str, marker: str):
+    # Inherit the parent environment (JAX_PLATFORMS in particular: without
+    # it the child probes for TPU/GPU plugins and can stall for minutes
+    # before falling back to CPU) and force the host-platform override.
+    env = dict(os.environ,
+               PYTHONPATH=str(REPO / "src"),
+               JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"))
     proc = subprocess.run(
         [sys.executable, str(SCRIPT), case],
-        capture_output=True, text=True, timeout=600,
-        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+        capture_output=True, text=True, timeout=600, env=env,
         cwd=str(REPO))
     assert marker in proc.stdout, (proc.stdout[-2000:], proc.stderr[-4000:])
 
 
+@pytest.mark.slow
 def test_sharded_step_matches_single_device():
     _run("test_sharded_step_matches_single_device", "SHARDED_MATCH_OK")
 
 
+@pytest.mark.slow
 def test_elastic_restore_across_meshes():
     _run("test_elastic_restore", "ELASTIC_OK")
 
 
+@pytest.mark.slow
 def test_multipod_mesh_compiles():
     _run("test_multipod_mesh_compiles", "MULTIPOD_OK")

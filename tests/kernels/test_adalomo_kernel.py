@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline CI: deterministic shim (tests/_compat)
+    from hypothesis_stub import given, settings, strategies as st
 
 from repro.core.adalomo import AdaLomoConfig
 from repro.kernels.adalomo_update.ops import adalomo_update, make_kernel_rule

@@ -1,0 +1,173 @@
+"""Continuous-batching engine behaviour: mid-flight admission produces
+the same tokens as solo runs, EOS recycles pages, the fixed-shape decode
+chunk never recompiles after warmup, and the fixed legacy engine still
+serves."""
+import jax
+import numpy as np
+import pytest
+
+from benchmarks.common import tiny_llama
+from repro.serve.engine import (Engine, PagedEngine, PagedServeConfig,
+                                ServeConfig)
+
+PROMPTS = [[5, 17, 23, 9], [101, 44], [7] * 6, [3, 4, 5, 6, 7, 8, 9, 10, 11],
+           [42] * 14]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    arch = tiny_llama(layers=2, d=64)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    return arch, params
+
+
+def _cfg(**kw):
+    base = dict(page_size=8, num_pages=32, max_batch=3, max_pages_per_seq=8,
+                chunk=4, max_new_tokens=8, bucket_min=8)
+    base.update(kw)
+    return PagedServeConfig(**base)
+
+
+def _solo(arch, params, prompt, **kw):
+    return PagedEngine(arch, params, _cfg(**kw)).generate([prompt])[0]
+
+
+def test_midflight_admission_matches_solo(setup):
+    """Requests that join the running batch between chunks must produce
+    exactly the tokens they'd produce served alone (greedy)."""
+    arch, params = setup
+    solos = [_solo(arch, params, p) for p in PROMPTS]
+    eng = PagedEngine(arch, params, _cfg())
+    rids = [eng.submit(p) for p in PROMPTS[:2]]
+    eng.step()                         # batch is mid-flight...
+    eng.step()
+    rids += [eng.submit(p) for p in PROMPTS[2:]]   # ...now others join
+    eng.run()
+    for solo, rid in zip(solos, rids):
+        assert eng.requests[rid].out == solo, rid
+
+
+def test_preemption_matches_solo(setup):
+    """A pool too small for all admitted sequences forces preemption; the
+    re-prefill over prompt+generated must reproduce the same stream."""
+    arch, params = setup
+    kw = dict(page_size=4, num_pages=14, max_pages_per_seq=16,
+              max_new_tokens=24)
+    big = dict(kw, num_pages=64)
+    prompts = PROMPTS[:3]
+    solos = [_solo(arch, params, p, **big) for p in prompts]
+    eng = PagedEngine(arch, params, _cfg(**kw))
+    outs = eng.generate(prompts)
+    assert sum(r.n_preempted for r in eng.requests.values()) > 0, \
+        "pool was large enough that preemption never happened"
+    assert outs == solos
+
+
+def test_eos_frees_pages_back_to_allocator(setup):
+    arch, params = setup
+    # discover what the model greedily emits, then make token #2 the EOS
+    eng0 = PagedEngine(arch, params, _cfg())
+    probe = eng0.generate([PROMPTS[0]])[0]
+    eos = probe[2]
+    eng = PagedEngine(arch, params, _cfg(eos_id=eos))
+    n_free_before = eng.allocator.n_free
+    out = eng.generate([PROMPTS[0]])[0]
+    assert out == probe[:3] and out[-1] == eos    # stopped at EOS
+    assert not eng.scheduler.has_work()
+    assert eng.allocator.n_free == n_free_before  # every page recycled
+    # and the freed pages are immediately reusable by a new request
+    out2 = eng.generate([PROMPTS[1]])[0]
+    assert len(out2) > 0
+    assert eng.allocator.n_free == n_free_before
+
+
+def test_zero_decode_recompiles_after_warmup(setup):
+    """A mixed-length (16-256 token prompts) continuous-batching workload
+    must add zero decode executables after warmup: the decode chunk is one
+    fixed-shape program, prefill a bounded pow-2 bucket set."""
+    arch, params = setup
+    rng = np.random.RandomState(0)
+    lens = [16, 40, 100, 256, 23, 180]
+    prompts = [list(rng.randint(1, 250, size=n).astype(int)) for n in lens]
+    eng = PagedEngine(arch, params, PagedServeConfig(
+        page_size=32, num_pages=41, max_batch=3, max_pages_per_seq=9,
+        chunk=2, max_new_tokens=4, bucket_min=16))
+    eng.warmup([min(lens), max(lens)])   # covers buckets 16..256
+    assert eng.decode_compile_count() == 1
+    prefill_compiles = eng.prefill_compile_count()
+    rids = [eng.submit(p) for p in prompts[:3]]
+    eng.step()
+    rids += [eng.submit(p) for p in prompts[3:]]   # join mid-flight
+    eng.run()
+    assert all(len(eng.requests[r].out) == 4 for r in rids)
+    assert eng.decode_compile_count() == 1, "decode step recompiled"
+    # prefill compiles stay within the warmed pow-2 bucket set
+    assert eng.prefill_compile_count() == prefill_compiles
+    # another mixed round: still the same executables
+    eng.generate([prompts[1][:17], prompts[3][:77]])
+    assert eng.decode_compile_count() == 1
+    assert eng.prefill_compile_count() == prefill_compiles
+
+
+def test_pages_conserved_across_rounds(setup):
+    arch, params = setup
+    eng = PagedEngine(arch, params, _cfg())
+    total = eng.allocator.n_free
+    for round_prompts in (PROMPTS[:3], PROMPTS[3:], PROMPTS[1:4]):
+        eng.generate(round_prompts)
+        assert eng.allocator.n_free == total   # no leaked pages
+
+
+def test_engine_kernel_path_matches_jnp(setup):
+    """End-to-end with the paged Pallas kernel (interpret mode) instead of
+    the jnp gather path: same tokens."""
+    arch, params = setup
+    kw = dict(page_size=8, num_pages=32, max_batch=2, max_pages_per_seq=4,
+              chunk=2, max_new_tokens=4, bucket_min=8)
+    ref = PagedEngine(arch, params, PagedServeConfig(**kw))
+    krn = PagedEngine(arch, params,
+                      PagedServeConfig(**kw, use_kernel=True,
+                                       interpret=True))
+    prompts = [[5, 17, 23, 9], [7, 7]]
+    assert ref.generate(prompts) == krn.generate(prompts)
+
+
+def test_swa_arch_midflight_matches_solo():
+    """Sliding-window arch (danube smoke, window=8): the paged decode mask
+    must reproduce solo generations for ragged prompts too."""
+    from repro.models.registry import get_arch
+    arch = get_arch("h2o-danube-1.8b", smoke=True)
+    assert arch.supports_paged_serving() and arch.cfg.window == 8
+    params = arch.init_params(jax.random.PRNGKey(1))
+    prompts = [[5, 17, 23, 9, 2, 11, 3], [101, 44], [7] * 12]
+    solos = [_solo(arch, params, p, max_new_tokens=10) for p in prompts]
+    eng = PagedEngine(arch, params, _cfg(max_new_tokens=10))
+    rids = [eng.submit(prompts[0])]
+    eng.step()
+    rids += [eng.submit(p) for p in prompts[1:]]
+    eng.run()
+    assert [eng.requests[r].out for r in rids] == solos
+
+
+def test_max_new_tokens_zero_and_oversize_rejection(setup):
+    arch, params = setup
+    eng = PagedEngine(arch, params, _cfg())
+    assert eng.generate([[1, 2, 3]], max_new_tokens=0) == [[]]
+    assert eng.allocator.n_free == eng.scfg.num_pages - 1
+    with pytest.raises(ValueError):
+        eng.submit([1] * 100)          # exceeds per-seq/pool capacity
+
+
+def test_legacy_engine_single_transfer_decode(setup):
+    """The fixed legacy engine: emits max_new tokens per row, stops at
+    EOS, and keeps finished rows frozen rather than re-sampling them."""
+    arch, params = setup
+    eng = Engine(arch, params, ServeConfig(max_new_tokens=6))
+    outs = eng.generate([[1, 2, 3], [4, 5, 6]])
+    assert all(len(o) == 6 for o in outs)
+    eos = outs[0][1]                   # make the 2nd emitted token EOS
+    eng2 = Engine(arch, params, ServeConfig(max_new_tokens=6, eos_id=eos))
+    outs2 = eng2.generate([[1, 2, 3], [4, 5, 6]])
+    assert outs2[0] == outs[0][:2] and outs2[0][-1] == eos
+    for o in outs2:
+        assert len(o) <= 6

@@ -1,0 +1,85 @@
+"""Page allocator + block-table unit tests (pure host-side, no jit)."""
+import numpy as np
+import pytest
+
+from repro.serve.paging import (OutOfPages, PageAllocator,
+                                build_block_tables, pages_for)
+from repro.serve.scheduler import Request, Scheduler
+
+
+def test_pages_for():
+    assert pages_for(0, 16) == 0
+    assert pages_for(1, 16) == 1
+    assert pages_for(16, 16) == 1
+    assert pages_for(17, 16) == 2
+
+
+def test_allocator_reserves_scratch_page():
+    a = PageAllocator(num_pages=8, page_size=16)
+    got = a.alloc(7)
+    assert sorted(got) == list(range(1, 8))   # page 0 never handed out
+    with pytest.raises(OutOfPages):
+        a.alloc(1)
+    a.free(got)
+    assert a.n_free == 7
+
+
+def test_alloc_is_atomic():
+    a = PageAllocator(num_pages=4, page_size=8)
+    a.alloc(2)
+    before = a.n_free
+    with pytest.raises(OutOfPages):
+        a.alloc(2)
+    assert a.n_free == before   # failed alloc takes nothing
+
+
+def test_double_free_asserts():
+    a = PageAllocator(num_pages=4, page_size=8)
+    pages = a.alloc(1)
+    a.free(pages)
+    with pytest.raises(AssertionError):
+        a.free(pages)
+
+
+def test_block_tables_pad_with_scratch():
+    t = build_block_tables([[3, 1], [], [2]], max_pages_per_seq=4)
+    np.testing.assert_array_equal(
+        t, np.array([[3, 1, 0, 0], [0, 0, 0, 0], [2, 0, 0, 0]], np.int32))
+
+
+def test_scheduler_admission_gated_on_pages():
+    a = PageAllocator(num_pages=4, page_size=8)   # 3 usable pages
+    s = Scheduler(n_slots=2, allocator=a, max_pages_per_seq=3)
+    s.submit(Request(rid=0, prompt=[1] * 16, max_new_tokens=4))   # 2 pages
+    s.submit(Request(rid=1, prompt=[1] * 16, max_new_tokens=4))   # 2 pages
+    r0 = s.admit_next()
+    assert r0 is not None and r0.rid == 0 and len(r0.pages) == 2
+    assert s.admit_next() is None          # 1 page free < 2 needed
+    s.finish(r0)
+    assert a.n_free == 3
+    r1 = s.admit_next()
+    assert r1 is not None and r1.rid == 1
+
+
+def test_scheduler_preempt_requeues_at_front():
+    a = PageAllocator(num_pages=6, page_size=8)
+    s = Scheduler(n_slots=2, allocator=a, max_pages_per_seq=5)
+    s.submit(Request(rid=0, prompt=[1] * 8, max_new_tokens=30))
+    s.submit(Request(rid=1, prompt=[1] * 8, max_new_tokens=30))
+    old, young = s.admit_next(), s.admit_next()
+    young.out = [7, 8]
+    victim = s.preempt_latest()
+    assert victim is young and victim.pages == [] and victim.slot is None
+    assert s.queue[0] is young             # front of the queue
+    assert young.tokens == [1] * 8 + [7, 8]   # re-prefill covers generated
+    with pytest.raises(ValueError):           # exceeds per-seq capacity
+        s.submit(Request(rid=2, prompt=[1] * 30, max_new_tokens=30))
+
+
+def test_submit_rejects_request_larger_than_pool():
+    """A request that can never fit the pool must be rejected up front —
+    otherwise admission spins forever (run() livelock)."""
+    a = PageAllocator(num_pages=4, page_size=8)       # 3 usable pages
+    s = Scheduler(n_slots=2, allocator=a, max_pages_per_seq=8)
+    with pytest.raises(ValueError, match="pool"):
+        s.submit(Request(rid=0, prompt=[1] * 30, max_new_tokens=2))
