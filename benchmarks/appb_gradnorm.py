@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import fmt_row, tiny_llama
 from repro.core import optimizers as opt_lib
-from repro.core.fused import fused_train_step, init_fused_opt_state
+from repro.core.fused import fused_train_step
 from repro.data.pipeline import DataConfig, batches
 from repro.models.transformer import make_fused_spec
 
@@ -19,7 +19,7 @@ def run(fast: bool = True) -> list:
     steps = 40 if fast else 160
     arch = tiny_llama()
     spec = make_fused_spec(arch.cfg)
-    rule = opt_lib.get_rule("adalomo")
+    opt = opt_lib.get_opt("adalomo")
     rows = []
     finals, flops = {}, {}
     # clip=5.0: at proxy scale early grad norms exceed 1.0 by far, so the
@@ -28,11 +28,11 @@ def run(fast: bool = True) -> list:
     for name, gn in [("no_gradnorm", None), ("gradnorm", 5.0)]:
         key = jax.random.PRNGKey(0)
         params = arch.init_params(key)
-        opt_state = init_fused_opt_state(rule, params)
+        opt_state = opt.init(params)
 
         def fn(p, s, b, _gn=gn):
-            return fused_train_step(spec, rule, p, s, b,
-                                    lr=jnp.float32(2e-3),
+            return fused_train_step(spec, opt, p, s, b,
+                                    hparams=jnp.float32(2e-3),
                                     global_grad_norm=_gn)
 
         jf = jax.jit(fn, donate_argnums=(0, 1))

@@ -31,13 +31,16 @@ LRS = {"adalomo": 1e-2, "adafactor": 1e-2, "adamw": 2e-3, "lomo": 3e-2,
 
 def train_curve(arch: Arch, optimizer: str, *, steps=60, batch=8, seq=128,
                 lr=None, fused=None, seed=0, data_seed=0,
-                eval_every=0) -> dict:
-    """Train and return {'history', 'us_per_step'}."""
+                eval_every=0, hparams=None) -> dict:
+    """Train and return {'history', 'us_per_step'}.
+
+    ``hparams``: extra dynamic hyperparameters (Opt v2), e.g.
+    ``{"weight_decay": 0.01}`` — 1-D params auto-group to no-decay."""
     fused = fused if fused is not None else optimizer in (
         "adalomo", "lomo", "sgd")
     tcfg = TrainConfig(optimizer=optimizer, lr=lr or LRS[optimizer],
                        total_steps=steps, fused=fused, log_every=0,
-                       eval_every=eval_every)
+                       eval_every=eval_every, hparams=hparams or {})
     trainer = Trainer(arch, tcfg, log_fn=lambda s: None)
     params, opt_state = trainer.init(seed)
     dcfg = DataConfig(vocab=arch.cfg.vocab, seq_len=seq, global_batch=batch,

@@ -28,13 +28,12 @@ def _two_well():
     for name, lr in [("sgd", 0.02), ("sgd_momentum", 0.02),
                      ("sgd_variance", 0.02), ("adamw", 0.02),
                      ("adalomo", 0.05)]:
-        rule = opt_lib.get_rule(name)
+        opt = opt_lib.get_opt(name)
         p = jnp.array([0.5, 1.0])
-        s = rule.init(p)
+        s = opt.init(p)
         g_fn = jax.jit(jax.grad(f))
-        for t in range(1, 601):
-            p, s = rule.update(p, g_fn(p), s, lr=jnp.float32(lr),
-                               step=jnp.float32(t))
+        for _ in range(600):
+            p, s = opt.step(p, g_fn(p), s, jnp.float32(lr))
         res[name] = ("global" if float(p[0]) < 0 else "local",
                      float(f(p)))
     return res

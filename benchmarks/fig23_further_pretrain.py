@@ -26,8 +26,7 @@ def run(fast: bool = True) -> list:
                            total_steps=steps,
                            fused=opt == "adalomo", log_every=0)
         trainer = Trainer(arch, tcfg, log_fn=lambda s: None)
-        from repro.core.fused import init_fused_opt_state
-        opt_state = init_fused_opt_state(trainer.rule, base["params"])
+        opt_state = trainer.opt.init(base["params"])
         dcfg = DataConfig(vocab=arch.cfg.vocab, seq_len=128, global_batch=8,
                           seed=4242)  # domain shift
         out = trainer.fit(jax.tree.map(jnp.copy, base["params"]), opt_state,

@@ -13,28 +13,27 @@ import jax.numpy as jnp
 
 from benchmarks.common import fmt_row, tiny_llama
 from repro.core import optimizers as opt_lib
-from repro.core.fused import apply_gradients_unfused, init_fused_opt_state
 
 B, S = 8, 256
 
 
 def _measure(arch, rule_name, fused):
-    rule = opt_lib.get_rule(rule_name)
+    opt = opt_lib.get_opt(rule_name)
     key = jax.random.PRNGKey(0)
     params = arch.init_params(key)
-    opt_state = init_fused_opt_state(rule, params)
+    opt_state = opt.init(params)
     batch = {"tokens": jax.random.randint(key, (B, S), 0, arch.cfg.vocab),
              "labels": jax.random.randint(key, (B, S), 0, arch.cfg.vocab)}
-    lr = jnp.float32(1e-3)
+    hp = {"lr": jnp.float32(1e-3)}
     if fused:
-        step = arch.make_fused_train_step(rule)
-        fn = lambda p, s, b: step(p, s, b, lr=lr)  # noqa: E731
+        step = arch.make_fused_train_step(opt)
+        fn = lambda p, s, b: step(p, s, b, hparams=hp)  # noqa: E731
     else:
         loss_fn = arch.make_loss_fn()
 
         def fn(p, s, b):
             (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b)
-            p2, s2 = apply_gradients_unfused(rule, p, g, s, lr=lr)
+            p2, s2 = opt.step(p, g, s, hp)
             return p2, s2, loss, m
 
     jf = jax.jit(fn, donate_argnums=(0, 1))

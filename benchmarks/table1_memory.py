@@ -41,30 +41,28 @@ def analytic_rows(arch_ids=("h2o-danube-1.8b", "qwen3-32b",
 
 def structural_check() -> dict:
     """Compiled temp bytes: fused-AdaLomo vs unfused-AdamW on one model."""
-    from repro.core.fused import (apply_gradients_unfused,
-                                  init_fused_opt_state)
     arch = tiny_llama(layers=6, d=256)
     key = jax.random.PRNGKey(0)
     params = arch.init_params(key)
     batch = {"tokens": jnp.zeros((8, 256), jnp.int32),
              "labels": jnp.zeros((8, 256), jnp.int32)}
-    lr = jnp.float32(1e-3)
+    hp = {"lr": jnp.float32(1e-3)}
     out = {}
     for name, rule_name, fused in [("adalomo_fused", "adalomo", True),
                                    ("adamw_unfused", "adamw", False),
                                    ("lomo_fused", "lomo", True)]:
-        rule = opt_lib.get_rule(rule_name)
-        opt_state = init_fused_opt_state(rule, params)
+        opt = opt_lib.get_opt(rule_name)
+        opt_state = opt.init(params)
         if fused:
-            step = arch.make_fused_train_step(rule)
-            fn = lambda p, s, b: step(p, s, b, lr=lr)  # noqa: E731
+            step = arch.make_fused_train_step(opt)
+            fn = lambda p, s, b: step(p, s, b, hparams=hp)  # noqa: E731
         else:
             loss_fn = arch.make_loss_fn()
 
-            def fn(p, s, b, _loss_fn=loss_fn, _rule=rule):
+            def fn(p, s, b, _loss_fn=loss_fn, _opt=opt):
                 (loss, m), g = jax.value_and_grad(_loss_fn, has_aux=True)(
                     p, b)
-                p2, s2 = apply_gradients_unfused(_rule, p, g, s, lr=lr)
+                p2, s2 = _opt.step(p, g, s, hp)
                 return p2, s2, loss, m
 
         c = jax.jit(fn, donate_argnums=(0, 1)).lower(

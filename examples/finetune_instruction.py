@@ -21,7 +21,10 @@ def main():
     print(f"{'optimizer':<12} {'eval_loss':>9} {'eval_acc':>9} "
           f"{'us/step':>9}")
     for opt in ("adalomo", "adamw", "lomo"):
-        out = train_curve(arch, opt, steps=args.steps)
+        # AdamW gets the paper-standard decoupled decay; Opt v2 groups
+        # exempt 1-D params (norm scales/biases) automatically.
+        hp = {"weight_decay": 0.01} if opt == "adamw" else None
+        out = train_curve(arch, opt, steps=args.steps, hparams=hp)
         loss_fn = jax.jit(arch.make_loss_fn())
         ev = batches(DataConfig(vocab=arch.cfg.vocab, seq_len=128,
                                 global_batch=8, seed=1234))

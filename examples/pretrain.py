@@ -38,6 +38,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--optimizer", default="adalomo")
+    ap.add_argument("--weight-decay", type=float, default=None,
+                    help="dynamic hparam (Opt v2); 1-D params auto-group "
+                         "to no-decay")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--small", action="store_true")
@@ -50,11 +53,14 @@ def main():
           f"optimizer: {args.optimizer}")
     lrs = {"adalomo": 1e-3, "adamw": 3e-4, "adafactor": 1e-3, "sgd": 1e-2,
            "lomo": 1e-2}
+    hparams = ({} if args.weight_decay is None
+               else {"weight_decay": args.weight_decay})
     tcfg = TrainConfig(optimizer=args.optimizer, lr=lrs[args.optimizer],
                        total_steps=args.steps, fused=args.optimizer in
                        ("adalomo", "lomo", "sgd"),
                        eval_every=max(args.steps // 5, 1), ckpt_every=100,
-                       log_every=10, heartbeat_timeout_s=600)
+                       log_every=10, heartbeat_timeout_s=600,
+                       hparams=hparams)
     trainer = Trainer(arch, tcfg)
     params, opt_state = trainer.init(0)
     dcfg = DataConfig(vocab=arch.cfg.vocab, seq_len=args.seq,

@@ -1,32 +1,39 @@
 """Quickstart: AdaLomo in 30 lines — fused backward, factored state.
 
+Opt v2 idiom ("hyperparameters as arguments, state as data", DESIGN.md):
+build an ``Opt`` from a rule + param groups, ``opt.init(params)`` gives a
+serializable ``OptState(step, moments)`` pytree, and every train step takes
+an ``hparams`` dict — so lr/β/weight-decay schedules and per-group
+overrides are plain data, changed per step with zero recompiles.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import optimizers as opt
-from repro.core.fused import init_fused_opt_state
+from repro.core import optimizers as opt_lib
 from repro.models.registry import get_arch
 
 # 1. pick an architecture (any of the 10 assigned ids; smoke = CPU-sized)
 arch = get_arch("h2o-danube-1.8b", smoke=True)
 
-# 2. AdaLomo rule: factored second moment + grouped update normalization
-rule = opt.adalomo()
+# 2. AdaLomo: factored second moment + grouped update normalization.
+#    One rule, every path: the same Opt drives the fused backward engine,
+#    the unfused opt.step, and (backend="pallas") the TPU kernel.
+#    no_decay_1d() labels norm scales/biases into a weight_decay=0 group.
+opt = opt_lib.get_opt("adalomo", groups=(opt_lib.no_decay_1d(),))
 
 # 3. init params and the O(m+n)-per-matrix optimizer state
 params = arch.init_params(jax.random.PRNGKey(0))
-opt_state = init_fused_opt_state(rule, params)
-state_bytes = sum(x.size * x.dtype.itemsize
-                  for x in jax.tree.leaves(opt_state["moments"]))
+opt_state = opt.init(params)
+state_bytes = opt.state_bytes(params)
 param_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
 print(f"params: {param_bytes/1e6:.1f} MB, optimizer state: "
       f"{state_bytes/1e6:.2f} MB ({state_bytes/param_bytes:.1%})")
 
 # 4. the fused train step: backward pass and update are one scan —
 #    gradients of at most one layer are ever alive (LOMO's trick, XLA-style)
-step = jax.jit(arch.make_fused_train_step(rule), donate_argnums=(0, 1))
+step = jax.jit(arch.make_fused_train_step(opt), donate_argnums=(0, 1))
 
 batch = {
     "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
@@ -35,7 +42,10 @@ batch = {
                                  arch.cfg.vocab),
 }
 for i in range(10):
+    # hparams are data: this decayed lr never triggers a recompile
+    hp = {"lr": jnp.float32(1e-3 * (1.0 - i / 20)),
+          "weight_decay": jnp.float32(0.01)}
     params, opt_state, loss, metrics = step(params, opt_state, batch,
-                                            lr=jnp.float32(1e-3))
-    print(f"step {i}: loss={float(loss):.4f} "
+                                            hparams=hp)
+    print(f"step {int(opt_state.step)}: loss={float(loss):.4f} "
           f"acc={float(metrics['accuracy']):.3f}")

@@ -41,22 +41,34 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class AdaLomoConfig:
-    """Hyper-parameters of AdaLomo (paper §3.1 / Alg. 1)."""
+    """*Structural* configuration of AdaLomo (paper §3.1 / Alg. 1).
 
-    beta: float = 0.999            # single decay coefficient β for r and c
+    Only knobs that change state layout, numerics structure, or algorithm
+    shape live here.  The *dynamic* hyperparameters — lr, β, weight decay,
+    clip threshold d — are call-time arguments (see DEFAULT_HPARAMS and the
+    Opt v2 contract in ``core/api.py``), so they can be scheduled per step
+    and overridden per param group with zero recompiles.
+    """
+
     eps_div: float = 1e-8          # ε added to sqrt(v̂) in the division
     eps_stat: float = 1e-30        # tiny floor inside the statistics
     eps_rms: float = 1e-3          # ε₂: floor of the parameter-scale term
-    clip_threshold: float = 1.0    # d in  max(1, RMS(u)/d)
     min_dim_size_to_factor: int = 16
     factored: bool = True
     bias_correction: bool = True
-    weight_decay: float = 0.0      # decoupled, paper default: none
     # Faithfulness switch: Alg.1 line 10 literally reads u = g / v (no sqrt).
     # Dimensionally inconsistent with Eq.(2)/(4); off by default (DESIGN.md).
     literal_div_v: bool = False
     # dtype for the factored statistics; fp32 regardless of param dtype.
     state_dtype: Any = jnp.float32
+
+
+# Dynamic hyperparameters (Opt v2): accepted keys and paper defaults.
+#   beta — single decay coefficient β for r and c (paper Eq. 6/7)
+#   clip — d in  max(1, RMS(u)/d)  (Alg. 1 line 11)
+#   weight_decay — decoupled, paper default: none
+DEFAULT_HPARAMS = {"lr": 1e-3, "beta": 0.999, "weight_decay": 0.0,
+                   "clip": 1.0}
 
 
 class FactoredState(NamedTuple):
@@ -101,11 +113,11 @@ def _rms(x: Array, axes: tuple[int, ...]) -> Array:
 
 
 def update_moment(
-    grad: Array, state: FactoredState, cfg: AdaLomoConfig
+    grad: Array, state: FactoredState, *, beta, cfg: AdaLomoConfig
 ) -> FactoredState:
     """EMA update of the (possibly factored) second moment. Paper Eq.(6)(7)."""
     g2 = jnp.square(grad.astype(cfg.state_dtype)) + cfg.eps_stat
-    b = cfg.beta
+    b = beta
     if state.v is not None:
         return FactoredState(r=None, c=None, v=b * state.v + (1.0 - b) * g2)
     r = b * state.r + (1.0 - b) * jnp.sum(g2, axis=-1)
@@ -130,17 +142,21 @@ def compute_update(
     state: FactoredState,
     *,
     step: Array,
+    beta=DEFAULT_HPARAMS["beta"],
+    clip=DEFAULT_HPARAMS["clip"],
     cfg: AdaLomoConfig,
 ) -> tuple[Array, FactoredState]:
     """Return (û, new_state): the grouped-normalized update of Alg. 1.
 
     ``step`` is the 1-based global step (scalar, for bias correction).
+    ``beta``/``clip`` may be traced scalars (scheduled per call).
     û is in fp32; the caller applies ``θ ← θ - lr·û`` (and weight decay).
     """
-    new_state = update_moment(grad, state, cfg)
+    new_state = update_moment(grad, state, beta=beta, cfg=cfg)
     v = reconstruct_v(new_state, cfg)
     if cfg.bias_correction:
-        correction = 1.0 - cfg.beta ** step.astype(cfg.state_dtype)
+        correction = 1.0 - jnp.asarray(beta, cfg.state_dtype) \
+            ** step.astype(cfg.state_dtype)
         v_hat = v / jnp.maximum(correction, cfg.eps_stat)
     else:
         v_hat = v
@@ -152,7 +168,7 @@ def compute_update(
     axes = _matrix_axes(u.ndim)
     # Grouped update normalization (Alg.1 line 11): per-matrix trust ratio.
     rms_u = _rms(u, axes)
-    u = u / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+    u = u / jnp.maximum(1.0, rms_u / clip)
     p32 = param.astype(cfg.state_dtype)
     scale = jnp.maximum(cfg.eps_rms, _rms(p32, axes))
     u = u * scale
@@ -166,12 +182,22 @@ def update_tensor(
     *,
     lr: Array,
     step: Array,
+    beta=DEFAULT_HPARAMS["beta"],
+    weight_decay=DEFAULT_HPARAMS["weight_decay"],
+    clip=DEFAULT_HPARAMS["clip"],
     cfg: AdaLomoConfig,
 ) -> tuple[Array, FactoredState]:
-    """One AdaLomo step for a single tensor: θ ← θ - α·û (Alg.1 line 12)."""
-    u, new_state = compute_update(param, grad, state, step=step, cfg=cfg)
+    """One AdaLomo step for a single tensor: θ ← θ - α·û (Alg.1 line 12).
+
+    Decoupled weight decay pre-scales θ, but the RMS(θ) trust scale inside
+    ``compute_update`` is taken from the *un-decayed* θ (the Pallas kernel
+    matches this — see tests/kernels parity with weight_decay > 0).
+    Applied unconditionally: with weight_decay == 0 the factor is exactly
+    1.0, so the no-decay path is bitwise unchanged.
+    """
+    u, new_state = compute_update(param, grad, state, step=step, beta=beta,
+                                  clip=clip, cfg=cfg)
     p32 = param.astype(cfg.state_dtype)
-    if cfg.weight_decay:
-        p32 = p32 * (1.0 - lr * cfg.weight_decay)
+    p32 = p32 * (1.0 - lr * weight_decay)
     new_param = (p32 - lr * u).astype(param.dtype)
     return new_param, new_state

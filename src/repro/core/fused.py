@@ -34,7 +34,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.optimizers import TensorRule
+from repro.core.api import Opt, OptState, UpdateRule
 
 Array = jax.Array
 
@@ -43,32 +43,26 @@ Array = jax.Array
 # Per-tensor rule application across an arbitrary (layer) pytree
 # --------------------------------------------------------------------------
 
-def apply_rule_tree(rule: TensorRule, params, grads, states, *, lr, step):
-    """Apply ``rule`` leaf-wise. ``states`` has one rule-state per param leaf."""
+def apply_rule_tree(rule: UpdateRule, params, grads, states, labels, hp,
+                    step):
+    """Apply ``rule`` leaf-wise with per-group hyperparameters.
+
+    ``states`` has one rule-state per param leaf; ``labels`` is an int
+    pytree matching ``params`` (group index per leaf, from ``Opt.labels``);
+    ``hp`` is the tuple of resolved per-group hparam dicts from
+    ``Opt.resolve`` — labels are static, hparam values may be traced.
+    """
     treedef = jax.tree.structure(params)
     p_flat = treedef.flatten_up_to(params)
     g_flat = treedef.flatten_up_to(grads)
     s_flat = treedef.flatten_up_to(states)
+    l_flat = treedef.flatten_up_to(labels)
     new_p, new_s = [], []
-    for p, g, s in zip(p_flat, g_flat, s_flat):
-        np_, ns_ = rule.update(p, g, s, lr=lr, step=step)
+    for p, g, s, lab in zip(p_flat, g_flat, s_flat, l_flat):
+        np_, ns_ = rule.update(p, g, s, hp[lab], step)
         new_p.append(np_)
         new_s.append(ns_)
     return treedef.unflatten(new_p), treedef.unflatten(new_s)
-
-
-def init_rule_tree(rule: TensorRule, params):
-    return jax.tree.map(rule.init, params)
-
-
-def init_rule_tree_stacked(rule: TensorRule, stacked_params):
-    """Init states for a [L, ...] layer stack as L independent tensors.
-
-    Shape-dependent rules (AdaLomo/Adafactor factorization, grouped-RMS
-    axes) must see the *per-layer* shape: a stacked [L, d] norm scale is L
-    vectors, not an L×d matrix.  vmap makes state[i] == rule.init(param[i]).
-    """
-    return jax.tree.map(lambda p: jax.vmap(rule.init)(p), stacked_params)
 
 
 def _tree_add(a, b):
@@ -126,7 +120,7 @@ def stack_forward(
 
 def stack_backward_update(
     body: Callable,
-    rule: TensorRule,
+    rule: UpdateRule,
     stacked_params,
     stacked_states,
     ctx,
@@ -134,7 +128,8 @@ def stack_backward_update(
     dx_out,
     xs_aux=None,
     *,
-    lr,
+    labels,
+    hp,
     step,
     grad_constraint: Optional[Callable[[Any], Any]] = None,
 ):
@@ -169,7 +164,7 @@ def stack_backward_update(
             g_layer = grad_constraint(g_layer)
         # >>> the LOMO moment: this layer's grads are consumed *here* <<<
         new_p, new_s = apply_rule_tree(rule, layer_p, g_layer, layer_s,
-                                       lr=lr, step=step)
+                                       labels, hp, step)
         return (dx_in, _tree_add(d_ctx, g_ctx)), (new_p, new_s)
 
     (dx_in, d_ctx), (new_params, new_states) = jax.lax.scan(
@@ -239,19 +234,23 @@ class FusedSpec(NamedTuple):
 
 def fused_train_step(
     spec: FusedSpec,
-    rule: TensorRule,
+    opt: Opt,
     params,
-    opt_state,
+    opt_state: OptState,
     batch,
     *,
-    lr,
+    hparams=None,
     residual_constraint=None,
     global_grad_norm: Optional[float] = None,
     grad_constraint=None,
 ):
     """One fused LOMO/AdaLomo training step.
 
-    ``opt_state = {"step": int32, "moments": {"outer":…,"shared":…,"stacks":…}}``
+    ``opt_state`` is the v2 :class:`OptState` from ``opt.init(params)`` —
+    the same single layout as the unfused ``Opt.step`` path.  ``hparams``
+    is the call-time hyperparameter pytree (``Opt.resolve`` semantics:
+    dict of scalars, optional per-group overrides, bare scalar = lr);
+    its values may be traced, so lr/β/decay schedules never recompile.
     Returns ``(new_params, new_opt_state, loss, metrics)``.
 
     When ``global_grad_norm`` is set, runs LOMO's two-pass variant: pass 1
@@ -259,9 +258,12 @@ def fused_train_step(
     re-runs backward applying the clipped update — reproducing the paper's
     §2.1 "two backward passes" cost for the Appendix-B comparison.
     """
-    step = opt_state["step"] + 1
+    rule = opt.rule
+    hp = opt.resolve(hparams)
+    labels = opt.labels(params)
+    step = opt_state.step + 1
     stepf = step.astype(jnp.float32)
-    moments = opt_state["moments"]
+    moments = opt_state.moments
     outer, shared, stacks = params["outer"], params["shared"], params["stacks"]
 
     # ---- forward ----
@@ -286,7 +288,6 @@ def fused_train_step(
             return jnp.float32(0.0)
         return sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
 
-    scale = jnp.float32(1.0)
     if global_grad_norm is not None:
         # LOMO's two-pass mode (paper §2.1): pass 1 walks the entire backward
         # graph just to obtain the global grad norm; grads of each layer are
@@ -305,15 +306,17 @@ def fused_train_step(
         sq = sq + _sqsum(d_shared_n)
         gnorm = jnp.sqrt(sq)
         scale = jnp.minimum(1.0, global_grad_norm / (gnorm + 1e-6))
+        # Fold the clip into every group's lr — hparams stay data.
+        hp = tuple({**d, "lr": d["lr"] * scale} for d in hp)
 
-    eff_lr = lr * scale
     new_stacks, new_stack_m = {}, {}
     d_shared = _tree_zeros_like(shared)
     for name in reversed(list(stacks.keys())):
         gc = grad_constraint(name) if grad_constraint is not None else None
         dx, (d_sh, _), new_p, new_s = stack_backward_update(
             spec.bodies[name], rule, stacks[name], moments["stacks"][name],
-            (shared, ctx_act), residuals[name], dx, lr=eff_lr, step=stepf,
+            (shared, ctx_act), residuals[name], dx,
+            labels=labels["stacks"][name], hp=hp, step=stepf,
             grad_constraint=gc)
         new_stacks[name] = new_p
         new_stack_m[name] = new_s
@@ -322,67 +325,18 @@ def fused_train_step(
     (g_outer_pro,) = pro_vjp(dx)
     g_outer = _tree_add(g_outer_epi, g_outer_pro)
     new_outer, new_outer_m = apply_rule_tree(
-        rule, outer, g_outer, moments["outer"], lr=eff_lr, step=stepf)
+        rule, outer, g_outer, moments["outer"], labels["outer"], hp, stepf)
     new_shared, new_shared_m = apply_rule_tree(
-        rule, shared, d_shared, moments["shared"], lr=eff_lr, step=stepf)
+        rule, shared, d_shared, moments["shared"], labels["shared"], hp,
+        stepf)
 
     new_params = {"outer": new_outer, "shared": new_shared,
                   "stacks": new_stacks}
-    new_opt = {"step": step,
-               "moments": {"outer": new_outer_m, "shared": new_shared_m,
-                           "stacks": new_stack_m}}
+    new_opt = OptState(
+        step=step,
+        moments={"outer": new_outer_m, "shared": new_shared_m,
+                 "stacks": new_stack_m})
     return new_params, new_opt, loss, metrics
-
-
-def init_fused_opt_state(rule: TensorRule, params):
-    return {
-        "step": jnp.zeros((), jnp.int32),
-        "moments": {
-            "outer": init_rule_tree(rule, params["outer"]),
-            "shared": init_rule_tree(rule, params["shared"]),
-            "stacks": {k: init_rule_tree_stacked(rule, v)
-                       for k, v in params["stacks"].items()},
-        },
-    }
-
-
-def apply_gradients_unfused(rule: TensorRule, params, grads, opt_state, *,
-                            lr):
-    """Layout-aware unfused optimizer step (baselines / equivalence tests).
-
-    Applies ``rule`` per tensor, vmapping over the layer dim of stacks so
-    the math is identical to the fused path (state layouts match
-    :func:`init_fused_opt_state`)."""
-    step = opt_state["step"] + 1
-    stepf = step.astype(jnp.float32)
-    m = opt_state["moments"]
-
-    new_outer, m_outer = apply_rule_tree(
-        rule, params["outer"], grads["outer"], m["outer"], lr=lr, step=stepf)
-    new_shared, m_shared = apply_rule_tree(
-        rule, params["shared"], grads["shared"], m["shared"], lr=lr,
-        step=stepf)
-    new_stacks, m_stacks = {}, {}
-    for k, stacked in params["stacks"].items():
-        treedef = jax.tree.structure(stacked)
-        p_flat = treedef.flatten_up_to(stacked)
-        g_flat = treedef.flatten_up_to(grads["stacks"][k])
-        s_flat = treedef.flatten_up_to(m["stacks"][k])
-        np_, ns_ = [], []
-        for p, g, s in zip(p_flat, g_flat, s_flat):
-            pn, sn = jax.vmap(
-                lambda pi, gi, si: rule.update(pi, gi, si, lr=lr, step=stepf)
-            )(p, g, s)
-            np_.append(pn)
-            ns_.append(sn)
-        new_stacks[k] = treedef.unflatten(np_)
-        m_stacks[k] = treedef.unflatten(ns_)
-    new_params = {"outer": new_outer, "shared": new_shared,
-                  "stacks": new_stacks}
-    new_opt = {"step": step,
-               "moments": {"outer": m_outer, "shared": m_shared,
-                           "stacks": m_stacks}}
-    return new_params, new_opt
 
 
 def unfused_loss_fn(spec: FusedSpec, params, batch):

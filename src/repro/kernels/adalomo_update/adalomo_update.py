@@ -99,10 +99,9 @@ def stats_pallas(grad, r, c, *, beta, eps_stat, block=DEFAULT_BLOCK,
 def _update_kernel(scal_ref, p_ref, g_ref, r_ref, c_ref, p_out, acc_ref):
     phase = pl.program_id(0)
     i, j = pl.program_id(1), pl.program_id(2)
-    nj = pl.num_programs(2)
     (inv_denom_corr, eps_div, lr, clip, eps_rms, n_elems,
-     literal) = (scal_ref[0], scal_ref[1], scal_ref[2], scal_ref[3],
-                 scal_ref[4], scal_ref[5], scal_ref[6])
+     literal, decay) = (scal_ref[0], scal_ref[1], scal_ref[2], scal_ref[3],
+                        scal_ref[4], scal_ref[5], scal_ref[6], scal_ref[7])
 
     @pl.when((phase == 0) & (i == 0) & (j == 0))
     def _():
@@ -127,17 +126,21 @@ def _update_kernel(scal_ref, p_ref, g_ref, r_ref, c_ref, p_out, acc_ref):
         rms_u = jnp.sqrt(acc_ref[0] / n_elems)
         rms_p = jnp.sqrt(acc_ref[1] / n_elems)
         scale = jnp.maximum(eps_rms, rms_p) / jnp.maximum(1.0, rms_u / clip)
-        p_out[...] = (p - lr * u * scale).astype(p_out.dtype)
+        # Decoupled weight decay applied at write time: Σp² (hence the
+        # RMS(θ) trust scale) is accumulated from the *un-decayed* θ in
+        # phase 0, matching core.adalomo.update_tensor exactly.
+        p_out[...] = (p * decay - lr * u * scale).astype(p_out.dtype)
 
 
 def update_pallas(param, grad, r_new, c_new, *, lr, inv_denom_corr,
-                  eps_div, clip, eps_rms, n_elems, literal=False,
+                  eps_div, clip, eps_rms, n_elems, decay=1.0, literal=False,
                   block=DEFAULT_BLOCK, interpret=False):
     m, n = param.shape
     bm, bn = min(block[0], m), min(block[1], n)
     grid = (2, m // bm, n // bn)
     scal = jnp.array([inv_denom_corr, eps_div, lr, clip, eps_rms,
-                      float(n_elems), 1.0 if literal else 0.0], jnp.float32)
+                      float(n_elems), 1.0 if literal else 0.0, decay],
+                     jnp.float32)
     return pl.pallas_call(
         _update_kernel,
         grid=grid,

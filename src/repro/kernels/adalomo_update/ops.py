@@ -1,19 +1,28 @@
 """Jitted wrapper for the fused AdaLomo update kernel.
 
-``adalomo_update(param, grad, r, c, lr, step)`` — handles padding to block
-multiples, the tiny host-side r-sum between the two kernels, leading stack
-dims via vmap, and exposes ``interpret=`` for CPU validation against
-ref.py.  Falls back to the pure-jnp path for 1-D (unfactored) tensors.
+``adalomo_update(param, grad, r, c, lr, step, beta, weight_decay, clip)``
+— handles padding to block multiples, the tiny host-side r-sum between the
+two kernels, leading stack dims via vmap, and exposes ``interpret=`` for
+CPU validation against ref.py.
+
+All hyperparameters are dynamic operands (Opt v2 contract): lr/β/decay/
+clip may be traced scalars, so schedules and per-group overrides never
+recompile the kernel.  The structural knobs (ε's, factoring threshold,
+``literal_div_v``) stay in the static :class:`AdaLomoConfig`.
+
+This module exposes the raw 2-D kernel entry point only; optimizer-rule
+integration is the ``backend="pallas"`` dispatch inside
+``repro.core.optimizers.adalomo`` — there is no separately-registered
+kernel rule.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.adalomo import AdaLomoConfig
+from repro.core.adalomo import DEFAULT_HPARAMS, AdaLomoConfig
 from repro.kernels.adalomo_update.adalomo_update import (
     DEFAULT_BLOCK, stats_pallas, update_pallas)
 
@@ -27,17 +36,23 @@ def _pad_to(x, bm, bn):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block", "interpret"))
-def adalomo_update(param, grad, r, c, lr, step, *,
+def adalomo_update(param, grad, r, c, lr, step,
+                   beta=DEFAULT_HPARAMS["beta"],
+                   weight_decay=DEFAULT_HPARAMS["weight_decay"],
+                   clip=DEFAULT_HPARAMS["clip"], *,
                    cfg: AdaLomoConfig = AdaLomoConfig(),
                    block=DEFAULT_BLOCK, interpret: bool = False):
     """Fused AdaLomo step for a 2-D tensor (or stacked [..., m, n] via vmap).
 
-    Returns (new_param, new_r, new_c). Semantics == ref.adalomo_update_ref.
+    Returns (new_param, new_r, new_c). Semantics == ref.adalomo_update_ref:
+    decoupled weight decay scales θ at the final write, while the RMS(θ)
+    trust scale is computed from the un-decayed θ.
     """
     if param.ndim > 2:
         fn = functools.partial(adalomo_update, cfg=cfg, block=block,
                                interpret=interpret)
-        return jax.vmap(lambda p, g, rr, cc: fn(p, g, rr, cc, lr, step))(
+        return jax.vmap(lambda p, g, rr, cc: fn(
+            p, g, rr, cc, lr, step, beta, weight_decay, clip))(
             param, grad, r, c)
     assert param.ndim == 2, param.shape
     m, n = param.shape
@@ -48,46 +63,22 @@ def adalomo_update(param, grad, r, c, lr, step, *,
     r_p = jnp.pad(r, (0, p_p.shape[0] - m))
     c_p = jnp.pad(c, (0, p_p.shape[1] - n))
 
-    new_r, new_c = stats_pallas(g_p, r_p, c_p, beta=cfg.beta,
+    new_r, new_c = stats_pallas(g_p, r_p, c_p, beta=beta,
                                 eps_stat=cfg.eps_stat, block=(bm, bn),
                                 interpret=interpret)
     denom = jnp.maximum(jnp.sum(new_r), cfg.eps_stat)
     if cfg.bias_correction:
-        corr = jnp.maximum(1.0 - cfg.beta ** jnp.asarray(step, jnp.float32),
-                           cfg.eps_stat)
+        corr = jnp.maximum(
+            1.0 - jnp.asarray(beta, jnp.float32)
+            ** jnp.asarray(step, jnp.float32), cfg.eps_stat)
     else:
         corr = jnp.float32(1.0)
     inv_denom_corr = 1.0 / (denom * corr)
     lr_eff = jnp.asarray(lr, jnp.float32)
-    if cfg.weight_decay:
-        # decoupled decay folded into the kernel's lr·û via pre-scaling here
-        p_p = (p_p.astype(jnp.float32)
-               * (1.0 - lr_eff * cfg.weight_decay)).astype(p_p.dtype)
+    decay = 1.0 - lr_eff * jnp.asarray(weight_decay, jnp.float32)
     new_p = update_pallas(
         p_p, g_p, new_r, new_c, lr=lr_eff, inv_denom_corr=inv_denom_corr,
-        eps_div=cfg.eps_div, clip=cfg.clip_threshold, eps_rms=cfg.eps_rms,
-        n_elems=m * n, literal=cfg.literal_div_v, block=(bm, bn),
-        interpret=interpret)
+        eps_div=cfg.eps_div, clip=clip, eps_rms=cfg.eps_rms,
+        n_elems=m * n, decay=decay, literal=cfg.literal_div_v,
+        block=(bm, bn), interpret=interpret)
     return new_p[:m, :n], new_r[:m], new_c[:n]
-
-
-def make_kernel_rule(cfg: Optional[AdaLomoConfig] = None,
-                     interpret: bool = False):
-    """AdaLomo as a TensorRule backed by the Pallas kernel for factored
-    2-D+ tensors (pure-jnp fallback elsewhere) — drop-in for the fused
-    backward engine."""
-    from repro.core import adalomo as A
-    from repro.core.optimizers import TensorRule, _rule_from_fns
-    cfg = cfg or A.AdaLomoConfig()
-
-    def init_fn(p):
-        return A.init_state(p, cfg)
-
-    def update_fn(p, g, s, *, lr, step):
-        if s.v is None and p.ndim >= 2:
-            np_, nr, nc = adalomo_update(p, g, s.r, s.c, lr, step, cfg=cfg,
-                                         interpret=interpret)
-            return np_, A.FactoredState(r=nr, c=nc, v=None)
-        return A.update_tensor(p, g, s, lr=lr, step=step, cfg=cfg)
-
-    return _rule_from_fns("adalomo_kernel", init_fn, update_fn)

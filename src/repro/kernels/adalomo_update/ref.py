@@ -2,17 +2,23 @@
 
 This is literally the paper-faithful per-tensor update from
 ``repro.core.adalomo`` — the kernel must match it bit-for-bit in fp32
-(modulo reduction-order rounding, covered by allclose tolerances).
+(modulo reduction-order rounding, covered by allclose tolerances),
+including with weight_decay > 0 (the RMS(θ) trust scale comes from the
+un-decayed θ in both).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.adalomo import AdaLomoConfig, FactoredState, update_tensor
+from repro.core.adalomo import (DEFAULT_HPARAMS, AdaLomoConfig,
+                                FactoredState, update_tensor)
 
 
 def adalomo_update_ref(param, grad, r, c, *, lr, step,
+                       beta=DEFAULT_HPARAMS["beta"],
+                       weight_decay=DEFAULT_HPARAMS["weight_decay"],
+                       clip=DEFAULT_HPARAMS["clip"],
                        cfg: AdaLomoConfig = AdaLomoConfig()):
     """param/grad: [m, n]; r: [m]; c: [n]. Returns (new_param, new_r, new_c).
 
@@ -21,5 +27,6 @@ def adalomo_update_ref(param, grad, r, c, *, lr, step,
     state = FactoredState(r=r, c=c, v=None)
     new_param, new_state = update_tensor(
         param, grad, state, lr=jnp.asarray(lr, jnp.float32),
-        step=jnp.asarray(step, jnp.float32), cfg=cfg)
+        step=jnp.asarray(step, jnp.float32), beta=beta,
+        weight_decay=weight_decay, clip=clip, cfg=cfg)
     return new_param, new_state.r, new_state.c

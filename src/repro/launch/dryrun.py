@@ -138,7 +138,6 @@ def build_cell(arch_id: str, shape_name: str, mesh, *,
     activation-sharding policy, no gradient reduce-scatter constraint
     (EXPERIMENTS.md §Perf records both)."""
     from repro.core import optimizers as opt
-    from repro.core.fused import init_fused_opt_state
     from repro.configs.shapes import SHAPES
     from repro.models.registry import get_arch
     from repro.sharding import rules as R
@@ -168,8 +167,8 @@ def build_cell(arch_id: str, shape_name: str, mesh, *,
             "global_batch": sh.global_batch, "seq_len": sh.seq_len}
 
     if sh.kind == "train":
-        rule = opt.adalomo()
-        opt_sds = jax.eval_shape(lambda: init_fused_opt_state(rule, params_sds))
+        optv2 = opt.get_opt("adalomo")
+        opt_sds = jax.eval_shape(lambda: optv2.init(params_sds))
         o_specs = R.opt_pspecs(opt_sds, params_sds, p_specs, axes)
         o_shard = R.to_shardings(o_specs, mesh)
         rc = R.make_residual_constraint(mesh, axes)
@@ -177,12 +176,12 @@ def build_cell(arch_id: str, shape_name: str, mesh, *,
               if optimized else None)
         pc = (R.make_param_constraint(mesh, axes, params_sds)
               if optimized else None)
-        step_kw = arch.make_fused_train_step(rule, residual_constraint=rc,
+        step_kw = arch.make_fused_train_step(optv2, residual_constraint=rc,
                                              grad_constraint=gc,
                                              param_constraint=pc)
 
         def fn(params, opt_state, batch, lr):
-            return step_kw(params, opt_state, batch, lr=lr)
+            return step_kw(params, opt_state, batch, hparams={"lr": lr})
 
         scalar = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
         in_sh = (p_shard, o_shard, b_shard, scalar)

@@ -29,6 +29,12 @@ def main(argv=None):
                     help="use the reduced smoke config")
     ap.add_argument("--optimizer", default="adalomo")
     ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--weight-decay", type=float, default=None,
+                    help="decoupled weight decay (Opt v2 dynamic hparam; "
+                         "1-D params are auto-grouped to no-decay)")
+    ap.add_argument("--opt-backend", default=None,
+                    choices=["auto", "jnp", "pallas"],
+                    help="AdaLomo update backend (Pallas kernel on TPU)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -56,11 +62,16 @@ def main(argv=None):
     lr = args.lr if args.lr is not None else default_lr.get(args.optimizer,
                                                             1e-3)
     arch = get_arch(args.arch, smoke=args.smoke)
+    hparams = ({} if args.weight_decay is None
+               else {"weight_decay": args.weight_decay})
+    opt_kwargs = ({} if args.opt_backend is None
+                  else {"backend": args.opt_backend})
     tcfg = TrainConfig(optimizer=args.optimizer, lr=lr,
                        total_steps=args.steps, fused=not args.unfused,
                        microbatches=args.microbatches,
                        eval_every=args.eval_every,
-                       ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+                       ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+                       hparams=hparams, opt_kwargs=opt_kwargs)
     trainer = Trainer(arch, tcfg)
     params, opt_state = trainer.init(args.seed)
 

@@ -186,15 +186,18 @@ def _loss_from_dec(outer, cfg: EncDecConfig, x: Array, batch):
     return loss, metrics
 
 
-def make_fused_train_step(cfg: EncDecConfig, rule):
+def make_fused_train_step(cfg: EncDecConfig, opt):
     enc_body = make_enc_body(cfg)
     dec_body = make_dec_body(cfg)
 
-    def train_step(params, opt_state, batch, *, lr,
+    def train_step(params, opt_state, batch, *, hparams=None,
                    residual_constraint=None, grad_constraint=None):
-        step = opt_state["step"] + 1
+        rule = opt.rule
+        hp = opt.resolve(hparams)
+        labels = opt.labels(params)
+        step = opt_state.step + 1
         stepf = step.astype(jnp.float32)
-        m = opt_state["moments"]
+        m = opt_state.moments
         outer, stacks = params["outer"], params["stacks"]
         frames = batch["frames"].astype(cfg.dtype)
         x_e0 = frames + _sinusoid(frames.shape[1],
@@ -221,27 +224,27 @@ def make_fused_train_step(cfg: EncDecConfig, rule):
         gc_enc = grad_constraint("enc") if grad_constraint else None
         dxd0, (_, d_enc_out), new_dec, new_dec_m = F.stack_backward_update(
             dec_body, rule, stacks["dec"], m["stacks"]["dec"],
-            ((), enc_out), dec_res, dxd, lr=lr, step=stepf,
-            grad_constraint=gc_dec)
+            ((), enc_out), dec_res, dxd, labels=labels["stacks"]["dec"],
+            hp=hp, step=stepf, grad_constraint=gc_dec)
         g_outer_dpro, = dec_pro_vjp(dxd0)
         g_outer_enorm, dxe_out = enc_norm_vjp(d_enc_out)
         dxe0, _, new_enc, new_enc_m = F.stack_backward_update(
             enc_body, rule, stacks["enc"], m["stacks"]["enc"],
-            ((), ()), enc_res, dxe_out, lr=lr, step=stepf,
-            grad_constraint=gc_enc)
+            ((), ()), enc_res, dxe_out, labels=labels["stacks"]["enc"],
+            hp=hp, step=stepf, grad_constraint=gc_enc)
         del dxe0  # frames are inputs, no params upstream
 
         g_outer = F._tree_add(F._tree_add(g_outer_epi, g_outer_dpro),
                               g_outer_enorm)
         new_outer, new_outer_m = F.apply_rule_tree(
-            rule, outer, g_outer, m["outer"], lr=lr, step=stepf)
+            rule, outer, g_outer, m["outer"], labels["outer"], hp, stepf)
 
         new_params = {"outer": new_outer, "shared": {},
                       "stacks": {"enc": new_enc, "dec": new_dec}}
-        new_opt = {"step": step,
-                   "moments": {"outer": new_outer_m, "shared": {},
-                               "stacks": {"enc": new_enc_m,
-                                          "dec": new_dec_m}}}
+        new_opt = F.OptState(
+            step=step,
+            moments={"outer": new_outer_m, "shared": {},
+                     "stacks": {"enc": new_enc_m, "dec": new_dec_m}})
         return new_params, new_opt, loss, metrics
 
     return train_step

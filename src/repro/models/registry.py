@@ -50,13 +50,16 @@ class Arch:
                 "hybrid": hybrid, "encdec": encdec}[self.family]
 
     # ---- train ------------------------------------------------------------
-    def make_fused_train_step(self, rule, *, residual_constraint=None,
+    def make_fused_train_step(self, opt, *, residual_constraint=None,
                               global_grad_norm=None, grad_constraint=None,
                               param_constraint=None):
+        """``opt`` is a v2 ``repro.core.api.Opt``; the returned step is
+        ``step(params, opt_state, batch, *, hparams)`` with hparams as
+        call-time data (Opt v2 contract)."""
         from repro.core.fused import fused_train_step
         if self.family == "encdec":
             from repro.models.encdec import make_fused_train_step
-            step = make_fused_train_step(self.cfg, rule)
+            step = make_fused_train_step(self.cfg, opt)
             return partial(step, residual_constraint=residual_constraint,
                            grad_constraint=grad_constraint)
         spec = self._family_mod().make_fused_spec(self.cfg)
@@ -70,9 +73,9 @@ class Arch:
                 name: wrap(b, param_constraint(name))
                 for name, b in spec.bodies.items()})
 
-        def train_step(params, opt_state, batch, *, lr):
+        def train_step(params, opt_state, batch, *, hparams=None):
             return fused_train_step(
-                spec, rule, params, opt_state, batch, lr=lr,
+                spec, opt, params, opt_state, batch, hparams=hparams,
                 residual_constraint=residual_constraint,
                 global_grad_norm=global_grad_norm,
                 grad_constraint=grad_constraint)

@@ -17,8 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import optimizers as opt_lib
-from repro.core.fused import (apply_gradients_unfused, fused_train_step,
-                              init_fused_opt_state)
+from repro.core.api import Opt, no_decay_1d
 from repro.train.fault import Heartbeat, StragglerMonitor, retrying
 from repro.train.schedules import constant, warmup_cosine
 
@@ -37,7 +36,16 @@ class TrainConfig:
     ckpt_dir: Optional[str] = None
     heartbeat_timeout_s: float = 0.0  # 0 = disabled
     log_every: int = 10
+    # Static/rule-construction kwargs forwarded to the registry factory
+    # (backend=, cfg=, default hparams ...).
     opt_kwargs: dict = dataclasses.field(default_factory=dict)
+    # Extra *dynamic* hyperparameters passed with the per-step lr (e.g.
+    # {"weight_decay": 0.1}); schedulable without recompiles (Opt v2).
+    hparams: dict = dataclasses.field(default_factory=dict)
+    # Param groups: () for none.  None = the paper-standard default of
+    # no weight decay on 1-D tensors (only active for rules with a
+    # weight_decay hparam, where wd=0 makes it a no-op).
+    groups: Optional[tuple] = None
 
 
 class Trainer:
@@ -49,7 +57,12 @@ class Trainer:
         self.tcfg = tcfg
         self.mesh = mesh
         self.log = log_fn
-        self.rule = opt_lib.get_rule(tcfg.optimizer, **tcfg.opt_kwargs)
+        rule = opt_lib.get_rule(tcfg.optimizer, **tcfg.opt_kwargs)
+        groups = tcfg.groups
+        if groups is None:
+            groups = ((no_decay_1d(),)
+                      if "weight_decay" in rule.hparams else ())
+        self.opt = Opt(rule, groups=groups)
         self.lr_fn = (warmup_cosine(tcfg.lr, tcfg.total_steps,
                                     tcfg.warmup_frac)
                       if tcfg.schedule == "cosine" else constant(tcfg.lr))
@@ -60,15 +73,15 @@ class Trainer:
     def _build_step(self):
         tcfg = self.tcfg
         if tcfg.fused:
-            step_fn = self.arch.make_fused_train_step(self.rule)
+            step_fn = self.arch.make_fused_train_step(self.opt)
 
-            def one_step(params, opt_state, batch, lr):
-                return step_fn(params, opt_state, batch, lr=lr)
+            def one_step(params, opt_state, batch, hp):
+                return step_fn(params, opt_state, batch, hparams=hp)
 
             if tcfg.microbatches > 1:
                 inner = one_step
 
-                def one_step(params, opt_state, batch, lr):  # noqa: F811
+                def one_step(params, opt_state, batch, hp):  # noqa: F811
                     # LOMO-style: sequential updates per microbatch.
                     mb = jax.tree.map(
                         lambda x: x.reshape((tcfg.microbatches,
@@ -77,7 +90,7 @@ class Trainer:
 
                     def body(carry, b):
                         p, s = carry
-                        p, s, loss, metrics = inner(p, s, b, lr)
+                        p, s, loss, metrics = inner(p, s, b, hp)
                         return (p, s), (loss, metrics)
 
                     (params, opt_state), (losses, metrics) = jax.lax.scan(
@@ -89,7 +102,7 @@ class Trainer:
         else:
             loss_fn = self.arch.make_loss_fn()
 
-            def one_step(params, opt_state, batch, lr):
+            def one_step(params, opt_state, batch, hp):
                 if tcfg.microbatches > 1:
                     mb = jax.tree.map(
                         lambda x: x.reshape((tcfg.microbatches,
@@ -110,8 +123,7 @@ class Trainer:
                 else:
                     (loss, metrics), grads = jax.value_and_grad(
                         loss_fn, has_aux=True)(params, batch)
-                params2, opt2 = apply_gradients_unfused(
-                    self.rule, params, grads, opt_state, lr=lr)
+                params2, opt2 = self.opt.step(params, grads, opt_state, hp)
                 return params2, opt2, loss, metrics
 
             self._step = jax.jit(one_step, donate_argnums=(0, 1))
@@ -119,8 +131,15 @@ class Trainer:
     # ------------------------------------------------------------------
     def init(self, seed: int = 0):
         params = self.arch.init_params(jax.random.PRNGKey(seed))
-        opt_state = init_fused_opt_state(self.rule, params)
+        opt_state = self.opt.init(params)
         return params, opt_state
+
+    def hparams_at(self, step: int) -> dict:
+        """The dynamic hparams pytree for (1-based) ``step`` — scheduled lr
+        plus any TrainConfig extras; same structure every step, so the
+        jitted train step never recompiles.  The schedule is authoritative
+        for lr: set it via TrainConfig.lr/schedule, not tcfg.hparams."""
+        return {**self.tcfg.hparams, "lr": self.lr_fn(step)}
 
     def fit(self, params, opt_state, batch_iter, *, start_step: int = 0,
             eval_iter=None, ckpt_manager=None) -> dict:
@@ -141,9 +160,10 @@ class Trainer:
         for step in range(start_step, tcfg.total_steps):
             batch = next(batch_iter)
             batch = jax.tree.map(jnp.asarray, batch)
-            lr = self.lr_fn(step + 1)
+            hp = self.hparams_at(step + 1)
+            lr = hp["lr"]
             params, opt_state, loss, metrics = step_callable(
-                params, opt_state, batch, lr)
+                params, opt_state, batch, hp)
             dt = time.time() - t_last
             t_last = time.time()
             self.straggler.observe(step, dt)

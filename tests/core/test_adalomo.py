@@ -8,9 +8,9 @@ try:
 except ImportError:  # offline CI: deterministic shim (tests/_compat)
     from hypothesis_stub import given, settings, strategies as st
 
-from repro.core.adalomo import (AdaLomoConfig, FactoredState, init_state,
-                                reconstruct_v, state_bytes, update_moment,
-                                update_tensor)
+from repro.core.adalomo import (DEFAULT_HPARAMS, AdaLomoConfig,
+                                FactoredState, init_state, reconstruct_v,
+                                state_bytes, update_moment, update_tensor)
 
 CFG = AdaLomoConfig()
 
@@ -40,9 +40,8 @@ def test_moment_update_matches_paper_eq67():
     g = jnp.array([[1.0, 2.0], [3.0, 4.0]])
     st0 = FactoredState(r=jnp.array([1.0, 1.0]), c=jnp.array([2.0, 2.0]),
                         v=None)
-    cfg = AdaLomoConfig(beta=0.9, eps_stat=0.0,
-                        min_dim_size_to_factor=1)
-    st1 = update_moment(g, st0, cfg)
+    cfg = AdaLomoConfig(eps_stat=0.0, min_dim_size_to_factor=1)
+    st1 = update_moment(g, st0, beta=0.9, cfg=cfg)
     np.testing.assert_allclose(st1.r, 0.9 * 1.0 + 0.1 * jnp.array([5., 25.]))
     np.testing.assert_allclose(st1.c, 0.9 * 2.0 + 0.1 * jnp.array([10., 20.]))
 
@@ -52,10 +51,10 @@ def test_reconstruction_exact_for_rank1():
     a = jnp.array([1.0, 2.0, 4.0])
     b = jnp.array([0.5, 3.0])
     g = jnp.sqrt(jnp.outer(a, b))
-    cfg = AdaLomoConfig(beta=0.0, eps_stat=0.0, min_dim_size_to_factor=1,
+    cfg = AdaLomoConfig(eps_stat=0.0, min_dim_size_to_factor=1,
                         bias_correction=False)
     st0 = FactoredState(r=jnp.zeros(3), c=jnp.zeros(2), v=None)
-    st1 = update_moment(g, st0, cfg)
+    st1 = update_moment(g, st0, beta=0.0, cfg=cfg)
     v = reconstruct_v(st1, cfg)
     np.testing.assert_allclose(v, jnp.outer(a, b), rtol=1e-6)
 
@@ -71,7 +70,8 @@ def test_grouped_norm_bounds_update_rms():
     upd = (p - new_p)
     rms_upd = float(jnp.sqrt(jnp.mean(upd ** 2)))
     rms_p = float(jnp.sqrt(jnp.mean(p ** 2)))
-    assert rms_upd <= CFG.clip_threshold * max(CFG.eps_rms, rms_p) * 1.01
+    clip = DEFAULT_HPARAMS["clip"]
+    assert rms_upd <= clip * max(CFG.eps_rms, rms_p) * 1.01
 
 
 def test_update_scale_invariant_to_grad_scale():

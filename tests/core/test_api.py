@@ -1,0 +1,204 @@
+"""Opt v2 contract tests: hyperparameters as arguments, state as data.
+
+Covers path-based param-group labeling, hparam resolution/validation, the
+single serializable OptState layout, and the headline property: changing
+any dynamic hyperparameter (lr/β/weight-decay/clip) between steps never
+triggers a recompile — schedules are data, not code.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import optimizers as opt_lib
+from repro.core.api import (GroupSpec, LeafInfo, Opt, OptState, no_decay_1d,
+                            path_str)
+from repro.models.registry import get_arch
+
+
+# ---------------------------------------------------------------------
+# Labeling
+# ---------------------------------------------------------------------
+
+def _params():
+    return {
+        "outer": {"embed": jnp.zeros((8, 4)), "norm": jnp.zeros((4,))},
+        "shared": {},
+        "stacks": {"blocks": {"w": jnp.zeros((3, 4, 4)),
+                              "scale": jnp.zeros((3, 4))}},
+    }
+
+
+def test_leaf_info_sees_per_tensor_shape_for_stacks():
+    opt = opt_lib.get_opt("adalomo")
+    flat, _, infos, _ = opt._flat_infos(_params())
+    by_path = {i.path: i for i in infos}
+    assert by_path["stacks/blocks/w"].stacked
+    assert by_path["stacks/blocks/w"].tensor_shape == (4, 4)
+    assert by_path["stacks/blocks/scale"].tensor_ndim == 1
+    assert not by_path["outer/embed"].stacked
+    assert by_path["outer/embed"].tensor_ndim == 2
+
+
+def test_labels_regex_and_predicate_first_match_wins():
+    groups = (GroupSpec("norms", match=lambda i: i.tensor_ndim <= 1),
+              GroupSpec("embed", match=r"outer/embed"))
+    opt = opt_lib.get_opt("adamw", groups=groups)
+    labels = opt.labels(_params())
+    flat = {path_str(kp): lab for kp, lab
+            in jax.tree_util.tree_flatten_with_path(labels)[0]}
+    assert flat["outer/norm"] == 1          # predicate
+    assert flat["stacks/blocks/scale"] == 1  # stacked 1-D joins norms
+    assert flat["outer/embed"] == 2         # regex
+    assert flat["stacks/blocks/w"] == 0     # default group
+
+
+def test_duplicate_group_names_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        Opt(opt_lib.get_rule("sgd"),
+            groups=(GroupSpec("a", match="x"), GroupSpec("a", match="y")))
+
+
+def test_static_group_hparams_validated_at_construction():
+    with pytest.raises(KeyError, match="accepted hyperparameters"):
+        opt_lib.get_opt("sgd", groups=(GroupSpec(
+            "g", match="x", hparams={"weight_decay": 0.0}),))
+
+
+# ---------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------
+
+def test_resolve_merge_order():
+    """defaults < call-time base < static group < call-time group."""
+    opt = opt_lib.get_opt(
+        "adamw", weight_decay=0.3,
+        groups=(GroupSpec("g", match="x", hparams={"weight_decay": 0.0,
+                                                   "lr": 5e-4}),))
+    base, g = opt.resolve({"lr": 1e-3,
+                           "groups": {"g": {"lr": 7e-4}}})
+    assert base["lr"] == 1e-3 and base["weight_decay"] == 0.3
+    assert g["weight_decay"] == 0.0          # static group override
+    assert g["lr"] == 7e-4                   # call-time group override wins
+    assert base["beta1"] == 0.9              # untouched default
+
+
+def test_resolve_scalar_shorthand_and_unknown_group():
+    opt = opt_lib.get_opt("sgd")
+    (base,) = opt.resolve(0.25)
+    assert base["lr"] == 0.25
+    with pytest.raises(KeyError, match="unknown group"):
+        opt.resolve({"groups": {"nope": {"lr": 1.0}}})
+
+
+def test_describe_reports_groups():
+    opt = opt_lib.get_opt("adamw", groups=(no_decay_1d(),))
+    d = opt.describe(_params())
+    assert d["no_decay"]["hparams"]["weight_decay"] == 0.0
+    assert "outer/norm" in d["no_decay"]["paths"]
+    assert "outer/embed" in d["default"]["paths"]
+
+
+# ---------------------------------------------------------------------
+# State as data
+# ---------------------------------------------------------------------
+
+def test_optstate_is_a_plain_pytree_single_step_scalar():
+    opt = opt_lib.get_opt("adalomo")
+    p = _params()
+    st = opt.init(p)
+    assert isinstance(st, OptState)
+    assert st.step.dtype == jnp.int32 and st.step.shape == ()
+    # exactly one step scalar in the whole tree: every other leaf belongs
+    # to moments and matches a param's factored/unfactored layout
+    int_leaves = [x for x in jax.tree.leaves(st)
+                  if jnp.issubdtype(x.dtype, jnp.integer)]
+    assert len(int_leaves) == 1
+    # serializable: flatten/unflatten round-trip preserves structure
+    leaves, treedef = jax.tree_util.tree_flatten(st)
+    st2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert jax.tree.structure(st) == jax.tree.structure(st2)
+
+
+def test_factored_mask_per_group():
+    """GroupSpec(factored=False) forces O(mn) state for its leaves only."""
+    opt = opt_lib.get_opt("adalomo", groups=(GroupSpec(
+        "unfactored", match=r"outer/embed", factored=False),))
+    p = {"outer": {"embed": jnp.zeros((32, 64)), "w": jnp.zeros((32, 64))}}
+    st = opt.init(p)
+    m = st.moments["outer"]
+    assert m["embed"].v is not None and m["embed"].v.shape == (32, 64)
+    assert m["w"].v is None and m["w"].r.shape == (32,)
+    assert opt.state_bytes(p) == (32 * 64 + 32 + 64) * 4
+
+
+def test_state_bytes_matches_eval_shape():
+    arch = get_arch("h2o-danube-1.8b", smoke=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    opt = opt_lib.get_opt("adalomo")
+    st = opt.init(params)
+    real = sum(x.size * x.dtype.itemsize
+               for x in jax.tree.leaves(st.moments))
+    assert opt.state_bytes(params) == real
+
+
+# ---------------------------------------------------------------------
+# Zero recompiles under hparam schedules (the headline v2 property)
+# ---------------------------------------------------------------------
+
+def _hp(lr, beta, wd):
+    return {"lr": jnp.float32(lr), "beta": jnp.float32(beta),
+            "weight_decay": jnp.float32(wd)}
+
+
+def test_zero_recompile_fused_step_under_schedule():
+    """Changing lr/β/weight-decay between steps must not retrigger
+    compilation of the fused train step (compile-counter assertion)."""
+    arch = get_arch("h2o-danube-1.8b", smoke=True)
+    opt = opt_lib.get_opt("adalomo", groups=(no_decay_1d(),))
+    key = jax.random.PRNGKey(0)
+    params = arch.init_params(key)
+    state = opt.init(params)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, arch.cfg.vocab),
+             "labels": jax.random.randint(key, (2, 16), 0, arch.cfg.vocab)}
+    step = jax.jit(arch.make_fused_train_step(opt))
+    for lr, beta, wd in [(1e-3, 0.999, 0.0), (5e-4, 0.99, 0.1),
+                         (1e-4, 0.9, 0.01)]:
+        params, state, loss, _ = step(params, state, batch,
+                                      hparams=_hp(lr, beta, wd))
+    assert step._cache_size() == 1, \
+        "hparam schedule recompiled the fused train step"
+    assert int(state.step) == 3
+
+
+def test_zero_recompile_unfused_step_under_schedule():
+    opt = opt_lib.get_opt("adamw", groups=(no_decay_1d(),))
+    p = _params()
+    p = jax.tree.map(lambda x: jnp.ones_like(x) * 0.1, p)
+    g = jax.tree.map(jnp.ones_like, p)
+    st = opt.init(p)
+    step = jax.jit(opt.step)
+    for lr, wd in [(1e-3, 0.0), (5e-4, 0.1), (2e-3, 0.3)]:
+        p, st = step(p, g, st, {"lr": jnp.float32(lr),
+                                "weight_decay": jnp.float32(wd),
+                                "groups": {"no_decay":
+                                           {"lr": jnp.float32(lr / 2)}}})
+    assert step._cache_size() == 1, \
+        "hparam/group-override schedule recompiled Opt.step"
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(p))
+
+
+def test_trainer_cosine_schedule_zero_recompiles():
+    """End-to-end: the Trainer's warmup-cosine lr schedule runs entirely
+    through the one compiled step."""
+    from repro.data.pipeline import DataConfig, batches
+    from repro.train.loop import TrainConfig, Trainer
+    arch = get_arch("h2o-danube-1.8b", smoke=True)
+    tcfg = TrainConfig(optimizer="adalomo", lr=1e-3, total_steps=6,
+                       schedule="cosine", log_every=0)
+    tr = Trainer(arch, tcfg, log_fn=lambda s: None)
+    params, state = tr.init(0)
+    dcfg = DataConfig(vocab=arch.cfg.vocab, seq_len=32, global_batch=4)
+    tr.fit(params, state, batches(dcfg))
+    assert tr._step._cache_size() == 1, \
+        "lr schedule recompiled the Trainer step"

@@ -1,13 +1,14 @@
 """The fused backward engine is semantics-preserving: same updates as the
-unfused jax.grad path, for every optimizer rule and model family pattern."""
+unfused jax.grad path, for every optimizer rule, model family pattern, and
+param-group hparam assignment (Opt v2)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import optimizers as opt_lib
-from repro.core.fused import (apply_gradients_unfused, fused_train_step,
-                              init_fused_opt_state, unfused_loss_fn)
+from repro.core.api import GroupSpec, no_decay_1d
+from repro.core.fused import fused_train_step
 from repro.models.registry import get_arch
 
 RULES = ["adalomo", "sgd", "sgd_momentum", "sgd_variance", "adamw",
@@ -30,34 +31,107 @@ def _batch(arch, key, B=2, S=16):
     return batch
 
 
+def _assert_trees_close(a, b, err=""):
+    for (kp, x), (_, y) in zip(
+            jax.tree_util.tree_leaves_with_path(a),
+            jax.tree_util.tree_leaves_with_path(b)):
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=5e-4, atol=5e-6,
+            err_msg=f"{err}: {jax.tree_util.keystr(kp)}")
+
+
 @pytest.mark.parametrize("rule_name", RULES)
 def test_fused_equals_unfused_updates(rule_name):
     """One step of fused backward == grad-then-update, leafwise."""
     arch = get_arch("h2o-danube-1.8b", smoke=True)
-    rule = opt_lib.get_rule(rule_name)
+    opt = opt_lib.get_opt(rule_name)
     key = jax.random.PRNGKey(0)
     params = arch.init_params(key)
-    opt_state = init_fused_opt_state(rule, params)
+    opt_state = opt.init(params)
     batch = _batch(arch, key)
-    lr = jnp.float32(1e-3)
+    hp = {"lr": jnp.float32(1e-3)}
 
-    step_f = jax.jit(arch.make_fused_train_step(rule),
-                     static_argnames=()).lower(
-        params, opt_state, batch, lr=lr).compile()
-    p_f, s_f, loss_f, _ = step_f(params, opt_state, batch, lr=lr)
+    step_f = jax.jit(arch.make_fused_train_step(opt)).lower(
+        params, opt_state, batch, hparams=hp).compile()
+    p_f, s_f, loss_f, _ = step_f(params, opt_state, batch, hparams=hp)
 
     loss_fn = arch.make_loss_fn()
     (loss_u, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params,
                                                                    batch)
-    p_u, s_u = apply_gradients_unfused(rule, params, grads, opt_state,
-                                       lr=lr)
+    p_u, s_u = opt.step(params, grads, opt_state, hp)
     np.testing.assert_allclose(loss_f, loss_u, rtol=1e-5)
-    for (kp, a), (_, b) in zip(
-            jax.tree_util.tree_leaves_with_path(p_f),
-            jax.tree_util.tree_leaves_with_path(p_u)):
-        np.testing.assert_allclose(
-            np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-6,
-            err_msg=f"{rule_name}: {jax.tree_util.keystr(kp)}")
+    assert int(s_f.step) == int(s_u.step) == 1
+    _assert_trees_close(p_f, p_u, rule_name)
+
+
+@pytest.mark.parametrize("rule_name", ["adalomo", "adamw"])
+def test_fused_equals_unfused_grouped_hparams(rule_name):
+    """Param-group labeling is path-consistent across the two engines:
+    no-decay-on-1D + a per-group lr override produce identical per-tensor
+    updates fused and unfused."""
+    groups = (no_decay_1d(),
+              GroupSpec("embed", match="outer/", hparams={"lr": 1e-4}))
+    arch = get_arch("h2o-danube-1.8b", smoke=True)
+    opt = opt_lib.get_opt(rule_name, groups=groups)
+    key = jax.random.PRNGKey(3)
+    params = arch.init_params(key)
+    opt_state = opt.init(params)
+    batch = _batch(arch, key)
+    hp = {"lr": jnp.float32(1e-3), "weight_decay": jnp.float32(0.1),
+          "groups": {"embed": {"lr": jnp.float32(2e-4)}}}
+
+    step_f = arch.make_fused_train_step(opt)
+    p_f, s_f, loss_f, _ = jax.jit(
+        lambda p, s, b, h: step_f(p, s, b, hparams=h))(
+        params, opt_state, batch, hp)
+
+    loss_fn = arch.make_loss_fn()
+    (loss_u, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                                   batch)
+    p_u, _ = opt.step(params, grads, opt_state, hp)
+    np.testing.assert_allclose(loss_f, loss_u, rtol=1e-5)
+    _assert_trees_close(p_f, p_u, rule_name)
+
+
+def test_group_overrides_change_the_right_tensors():
+    """weight_decay decays exactly the non-1D default-group tensors, and a
+    per-group lr=0 override freezes exactly that group."""
+    arch = get_arch("h2o-danube-1.8b", smoke=True)
+    key = jax.random.PRNGKey(4)
+    params = arch.init_params(key)
+    batch = _batch(arch, key)
+    loss_fn = arch.make_loss_fn()
+    (_, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+    # zero grads isolate the decay term: Δθ = -lr·wd·θ for decayed tensors
+    zero_g = jax.tree.map(jnp.zeros_like, grads)
+
+    opt = opt_lib.get_opt("adamw", groups=(no_decay_1d(),))
+    st = opt.init(params)
+    p2, _ = opt.step(params, zero_g, st,
+                     {"lr": 0.1, "weight_decay": 0.5})
+    labels = opt.labels(params)
+    for (kp, a), b, lab in zip(
+            jax.tree_util.tree_leaves_with_path(params),
+            jax.tree.leaves(p2), jax.tree.leaves(labels)):
+        a, b = np.asarray(a), np.asarray(b)
+        if lab == 1:    # no_decay group: 1-D → untouched
+            np.testing.assert_array_equal(a, b, err_msg=str(kp))
+        else:           # decayed: θ' = θ·(1 - 0.05)
+            np.testing.assert_allclose(b, a * 0.95, rtol=1e-6,
+                                       err_msg=str(kp))
+
+    # per-group lr override of 0 freezes the group (with real grads)
+    opt2 = opt_lib.get_opt("adamw", groups=(GroupSpec(
+        "frozen", match=lambda i: i.tensor_ndim <= 1),))
+    st2 = opt2.init(params)
+    p3, _ = opt2.step(params, grads, st2,
+                      {"lr": 0.1, "groups": {"frozen": {"lr": 0.0}}})
+    for (kp, a), b, lab in zip(
+            jax.tree_util.tree_leaves_with_path(params),
+            jax.tree.leaves(p3), jax.tree.leaves(opt2.labels(params))):
+        if lab == 1:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=str(kp))
 
 
 @pytest.mark.parametrize("arch_id", ["zamba2-1.2b", "whisper-base",
@@ -66,27 +140,22 @@ def test_fused_equals_unfused_special_families(arch_id):
     """Shared-weight grads (zamba2), cross-stream grads (whisper), and MoE
     aux-loss routing all survive the fused engine."""
     arch = get_arch(arch_id, smoke=True)
-    rule = opt_lib.get_rule("adalomo")
+    opt = opt_lib.get_opt("adalomo")
     key = jax.random.PRNGKey(1)
     params = arch.init_params(key)
-    opt_state = init_fused_opt_state(rule, params)
+    opt_state = opt.init(params)
     batch = _batch(arch, key)
-    lr = jnp.float32(1e-3)
-    step = arch.make_fused_train_step(rule)
+    hp = {"lr": jnp.float32(1e-3)}
+    step = arch.make_fused_train_step(opt)
     p_f, s_f, loss_f, _ = jax.jit(
-        lambda p, s, b: step(p, s, b, lr=lr))(params, opt_state, batch)
+        lambda p, s, b: step(p, s, b, hparams=hp))(params, opt_state, batch)
 
     loss_fn = arch.make_loss_fn()
     (loss_u, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params,
                                                                    batch)
-    p_u, _ = apply_gradients_unfused(rule, params, grads, opt_state, lr=lr)
+    p_u, _ = opt.step(params, grads, opt_state, hp)
     np.testing.assert_allclose(loss_f, loss_u, rtol=1e-5)
-    for (kp, a), (_, b) in zip(
-            jax.tree_util.tree_leaves_with_path(p_f),
-            jax.tree_util.tree_leaves_with_path(p_u)):
-        np.testing.assert_allclose(
-            np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-6,
-            err_msg=f"{arch_id}: {jax.tree_util.keystr(kp)}")
+    _assert_trees_close(p_f, p_u, arch_id)
 
 
 def test_two_pass_global_grad_norm_mode():
@@ -95,25 +164,25 @@ def test_two_pass_global_grad_norm_mode():
     from repro.models.transformer import make_fused_spec
     arch = get_arch("h2o-danube-1.8b", smoke=True)
     spec = make_fused_spec(arch.cfg)
-    rule = opt_lib.get_rule("sgd")  # LOMO = fused SGD
+    opt = opt_lib.get_opt("sgd")  # LOMO = fused SGD
     key = jax.random.PRNGKey(2)
     params = arch.init_params(key)
-    opt_state = init_fused_opt_state(rule, params)
+    opt_state = opt.init(params)
     batch = _batch(arch, key)
+    hp = jnp.float32(1e-3)   # bare scalar == {"lr": scalar}
 
     p1, _, loss1, _ = jax.jit(lambda p, s, b: fused_train_step(
-        spec, rule, p, s, b, lr=jnp.float32(1e-3),
+        spec, opt, p, s, b, hparams=hp,
         global_grad_norm=1e9))(params, opt_state, batch)
     p2, _, loss2, _ = jax.jit(lambda p, s, b: fused_train_step(
-        spec, rule, p, s, b, lr=jnp.float32(1e-3)))(params, opt_state,
-                                                    batch)
+        spec, opt, p, s, b, hparams=hp))(params, opt_state, batch)
     np.testing.assert_allclose(loss1, loss2, rtol=1e-6)
     for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
                                    atol=1e-7)
     # tight clip must change the result
     p3, _, _, _ = jax.jit(lambda p, s, b: fused_train_step(
-        spec, rule, p, s, b, lr=jnp.float32(1e-3),
+        spec, opt, p, s, b, hparams=hp,
         global_grad_norm=1e-4))(params, opt_state, batch)
     diffs = [float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
              for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p3))]
@@ -125,23 +194,22 @@ def test_gradient_liveness_structure():
     must not allocate any buffer the size of the full stacked-gradient
     pytree (the unfused step must).  We compare temp memory."""
     arch = get_arch("h2o-danube-1.8b", smoke=True)
-    cfg = arch.cfg
-    rule = opt_lib.get_rule("sgd")  # no optimizer state → isolates grads
+    opt = opt_lib.get_opt("sgd")  # no optimizer state → isolates grads
     key = jax.random.PRNGKey(0)
     B, S = 8, 128
     params = arch.init_params(key)
-    opt_state = init_fused_opt_state(rule, params)
+    opt_state = opt.init(params)
     batch = _batch(arch, key, B=B, S=S)
-    lr = jnp.float32(1e-3)
-    step = arch.make_fused_train_step(rule)
-    c_f = jax.jit(lambda p, s, b: step(p, s, b, lr=lr),
+    hp = {"lr": jnp.float32(1e-3)}
+    step = arch.make_fused_train_step(opt)
+    c_f = jax.jit(lambda p, s, b: step(p, s, b, hparams=hp),
                   donate_argnums=(0, 1)).lower(
         params, opt_state, batch).compile()
     loss_fn = arch.make_loss_fn()
 
     def unfused(p, s, b):
         (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b)
-        p2, s2 = apply_gradients_unfused(rule, p, g, s, lr=lr)
+        p2, s2 = opt.step(p, g, s, hp)
         return p2, s2, loss, m
 
     c_u = jax.jit(unfused, donate_argnums=(0, 1)).lower(

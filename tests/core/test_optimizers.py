@@ -1,6 +1,6 @@
-"""Baseline optimizer math + the paper's Appendix-A two-well analysis:
-Adam and SGD-with-variance escape to the global optimum; SGD and
-SGD-with-momentum get stuck in the local one."""
+"""Baseline optimizer math + registry validation + the paper's Appendix-A
+two-well analysis: Adam and SGD-with-variance escape to the global optimum;
+SGD and SGD-with-momentum get stuck in the local one."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,13 +9,18 @@ import pytest
 from repro.core import optimizers as opt_lib
 
 
+def _hp(rule, **over):
+    """Resolved hparam dict: rule defaults + overrides."""
+    return {**rule.hparams, **over}
+
+
 def test_adamw_matches_manual_step():
     p = jnp.array([[1.0, -2.0]])
     g = jnp.array([[0.5, 0.25]])
     rule = opt_lib.adamw(beta1=0.9, beta2=0.99, eps=1e-8, weight_decay=0.1)
     s = rule.init(p)
-    lr = jnp.float32(0.1)
-    p1, s1 = rule.update(p, g, s, lr=lr, step=jnp.float32(1))
+    p1, s1 = rule.update(p, g, s, _hp(rule, lr=jnp.float32(0.1)),
+                         jnp.float32(1))
     m = 0.1 * g
     v = 0.01 * g ** 2
     m_hat = m / 0.1
@@ -28,8 +33,8 @@ def test_sgd_is_lomo_rule():
     p = jnp.ones((4, 4))
     g = jnp.full((4, 4), 2.0)
     rule = opt_lib.get_rule("lomo")
-    p1, _ = rule.update(p, g, rule.init(p), lr=jnp.float32(0.25),
-                        step=jnp.float32(1))
+    p1, _ = rule.update(p, g, rule.init(p), _hp(rule, lr=jnp.float32(0.25)),
+                        jnp.float32(1))
     np.testing.assert_allclose(p1, p - 0.5)
 
 
@@ -54,6 +59,38 @@ def test_table1_state_byte_ordering():
 
 
 # ---------------------------------------------------------------------
+# Registry kwarg validation (Opt v2): helpful errors, not bare TypeErrors
+# ---------------------------------------------------------------------
+
+def test_get_rule_unknown_name_lists_registry():
+    with pytest.raises(KeyError, match="unknown optimizer"):
+        opt_lib.get_rule("madgrad")
+
+
+def test_get_rule_unknown_kwarg_lists_accepted():
+    """get_rule('lomo', weight_decay=...) must raise a KeyError naming the
+    accepted kwargs, not crash with a bare TypeError."""
+    with pytest.raises(KeyError) as ei:
+        opt_lib.get_rule("lomo", weight_decay=0.1)
+    msg = str(ei.value)
+    assert "weight_decay" in msg and "accepted" in msg and "lr" in msg
+
+
+def test_get_rule_accepts_declared_hparam_defaults():
+    rule = opt_lib.get_rule("adamw", weight_decay=0.1)
+    assert rule.hparams["weight_decay"] == 0.1
+
+
+def test_call_time_hparam_validation():
+    """Unknown hparam keys at call time raise, naming the accepted set."""
+    opt = opt_lib.get_opt("sgd")
+    p = jnp.ones((4,))
+    s = opt.init(p)
+    with pytest.raises(KeyError, match="accepted hyperparameters"):
+        opt.step(p, p, s, {"lr": 0.1, "momentum": 0.9})
+
+
+# ---------------------------------------------------------------------
 # Appendix A: f(x,y) = x² + y² - 2e^{-5[(x-1)²+y²]} - 3e^{-5[(x+1)²+y²]}
 # global optimum near (-1, 0); local trap near (1, 0).
 # ---------------------------------------------------------------------
@@ -65,19 +102,18 @@ def _f(xy):
             - 3 * jnp.exp(-5 * ((x + 1) ** 2 + y ** 2)))
 
 
-def _descend(rule, lr, steps=600, x0=(0.5, 1.0)):
+def _descend(opt, lr, steps=600, x0=(0.5, 1.0)):
     p = jnp.array(x0)
-    s = rule.init(p)
+    s = opt.init(p)
     g_fn = jax.grad(_f)
 
     @jax.jit
-    def step(p, s, t):
+    def step(p, s, hp):
         g = g_fn(p)
-        return rule.update(p, g, s, lr=jnp.float32(lr),
-                           step=t.astype(jnp.float32))
+        return opt.step(p, g, s, hp)
 
-    for t in range(1, steps + 1):
-        p, s = step(p, s, jnp.asarray(t))
+    for _ in range(steps):
+        p, s = step(p, s, {"lr": jnp.float32(lr)})
     return np.asarray(p), float(_f(p))
 
 
@@ -91,7 +127,7 @@ def _descend(rule, lr, steps=600, x0=(0.5, 1.0)):
 def test_two_well_escape(name, lr, expect_global):
     """Second-moment methods (incl. AdaLomo) reach the deeper left well;
     first-order methods converge to the shallow right well (paper Fig. 6)."""
-    rule = opt_lib.get_rule(name)
-    p, fv = _descend(rule, lr)
+    opt = opt_lib.get_opt(name)
+    p, fv = _descend(opt, lr)
     reached_global = p[0] < 0
     assert reached_global == expect_global, (name, p, fv)

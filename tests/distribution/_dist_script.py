@@ -14,25 +14,24 @@ import numpy as np
 
 def make_bits(arch_id="h2o-danube-1.8b"):
     from repro.core import optimizers as opt_lib
-    from repro.core.fused import init_fused_opt_state
     from repro.models.registry import get_arch
     arch = get_arch(arch_id, smoke=True)
-    rule = opt_lib.get_rule("adalomo")
+    opt = opt_lib.get_opt("adalomo")
     key = jax.random.PRNGKey(0)
     params = arch.init_params(key)
-    opt_state = init_fused_opt_state(rule, params)
+    opt_state = opt.init(params)
     batch = {"tokens": jax.random.randint(key, (8, 32), 0, arch.cfg.vocab),
              "labels": jax.random.randint(key, (8, 32), 0, arch.cfg.vocab)}
-    return arch, rule, params, opt_state, batch
+    return arch, opt, params, opt_state, batch
 
 
 def test_sharded_step_matches_single_device():
     """pjit-sharded fused train step == single-device result."""
     from repro.launch.mesh import make_test_mesh
     from repro.sharding import rules as R
-    arch, rule, params, opt_state, batch = make_bits()
-    step = arch.make_fused_train_step(rule)
-    fn = lambda p, s, b: step(p, s, b, lr=jnp.float32(1e-3))  # noqa: E731
+    arch, opt, params, opt_state, batch = make_bits()
+    step = arch.make_fused_train_step(opt)
+    fn = lambda p, s, b: step(p, s, b, hparams=jnp.float32(1e-3))  # noqa: E731
 
     p1, s1, loss1, _ = jax.jit(fn)(params, opt_state, batch)
 
@@ -63,7 +62,7 @@ def test_elastic_restore():
     from repro.checkpoint.manager import CheckpointManager
     from repro.launch.mesh import _mk
     from repro.sharding import rules as R
-    arch, rule, params, opt_state, batch = make_bits()
+    arch, opt, params, opt_state, batch = make_bits()
     mesh8 = _mk((4, 2), ("data", "model"))
     axes8 = R.MeshAxes(mesh8)
     p_specs = R.param_pspecs(params, axes8)
@@ -94,9 +93,9 @@ def test_multipod_mesh_compiles():
     """Tiny multi-pod mesh (2,2,2): the pod axis shards the batch."""
     from repro.launch.mesh import make_test_mesh
     from repro.sharding import rules as R
-    arch, rule, params, opt_state, batch = make_bits()
-    step = arch.make_fused_train_step(rule)
-    fn = lambda p, s, b: step(p, s, b, lr=jnp.float32(1e-3))  # noqa: E731
+    arch, opt, params, opt_state, batch = make_bits()
+    step = arch.make_fused_train_step(opt)
+    fn = lambda p, s, b: step(p, s, b, hparams=jnp.float32(1e-3))  # noqa: E731
     mesh = make_test_mesh(8, multi_pod=True)
     axes = R.MeshAxes(mesh)
     assert axes.batch == ("pod", "data")

@@ -1,5 +1,5 @@
 """Pallas AdaLomo kernel vs the pure-jnp oracle (interpret mode on CPU):
-shape × dtype sweeps + hypothesis edge shapes + rule drop-in."""
+shape × dtype sweeps + hypothesis edge shapes + backend-dispatch drop-in."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +10,7 @@ except ImportError:  # offline CI: deterministic shim (tests/_compat)
     from hypothesis_stub import given, settings, strategies as st
 
 from repro.core.adalomo import AdaLomoConfig
-from repro.kernels.adalomo_update.ops import adalomo_update, make_kernel_rule
+from repro.kernels.adalomo_update.ops import adalomo_update
 from repro.kernels.adalomo_update.ref import adalomo_update_ref
 
 SHAPES = [(64, 128), (256, 512), (300, 700), (128, 130), (1000, 96),
@@ -35,11 +35,9 @@ def test_kernel_matches_oracle(shape, pdtype, gdtype):
     key = jax.random.PRNGKey(m * 7 + n)
     for step in (1.0, 5.0):
         p, g, r, c = _mk(key, m, n, pdtype, gdtype, step)
-        cfg = AdaLomoConfig()
-        pk, rk, ck = adalomo_update(p, g, r, c, 5e-4, step, cfg=cfg,
+        pk, rk, ck = adalomo_update(p, g, r, c, 5e-4, step,
                                     interpret=True, block=(128, 256))
-        pr, rr, cr = adalomo_update_ref(p, g, r, c, lr=5e-4, step=step,
-                                        cfg=cfg)
+        pr, rr, cr = adalomo_update_ref(p, g, r, c, lr=5e-4, step=step)
         tol = 1e-5 if pdtype == jnp.float32 else 5e-3
         np.testing.assert_allclose(
             np.asarray(pk, np.float32), np.asarray(pr, np.float32),
@@ -65,15 +63,59 @@ def test_stacked_vmap_path():
         np.testing.assert_allclose(rk[i], rr, rtol=1e-5, atol=1e-6)
 
 
-def test_literal_mode_and_weight_decay():
+def test_literal_mode_matches_oracle():
     key = jax.random.PRNGKey(5)
     p, g, r, c = _mk(key, 64, 128, jnp.float32, jnp.float32, 2.0)
-    for cfg in (AdaLomoConfig(literal_div_v=True),
-                AdaLomoConfig(weight_decay=0.1)):
-        pk, rk, ck = adalomo_update(p, g, r, c, 1e-3, 2.0, cfg=cfg,
-                                    interpret=True, block=(64, 128))
-        pr, rr, cr = adalomo_update_ref(p, g, r, c, lr=1e-3, step=2.0,
-                                        cfg=cfg)
+    cfg = AdaLomoConfig(literal_div_v=True)
+    pk, rk, ck = adalomo_update(p, g, r, c, 1e-3, 2.0, cfg=cfg,
+                                interpret=True, block=(64, 128))
+    pr, rr, cr = adalomo_update_ref(p, g, r, c, lr=1e-3, step=2.0, cfg=cfg)
+    np.testing.assert_allclose(pk, pr, rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("lr,wd", [(1e-3, 0.1), (0.1, 0.5)])
+def test_weight_decay_parity(lr, wd):
+    """Kernel == oracle with weight_decay > 0 at *tight* tolerance.
+
+    Regression for the pre-v2 divergence: the kernel used to pre-scale θ by
+    (1 - lr·wd) before accumulating Σθ², so its RMS(θ) trust scale came
+    from the decayed θ while the oracle's came from the un-decayed θ.  At
+    lr=0.1, wd=0.5 that is a 5% scale error — far outside this tolerance.
+    """
+    key = jax.random.PRNGKey(6)
+    p, g, r, c = _mk(key, 96, 160, jnp.float32, jnp.float32, 2.0)
+    pk, rk, ck = adalomo_update(p, g, r, c, lr, 2.0, 0.999, wd, 1.0,
+                                interpret=True, block=(64, 128))
+    pr, rr, cr = adalomo_update_ref(p, g, r, c, lr=lr, step=2.0,
+                                    weight_decay=wd)
+    np.testing.assert_allclose(pk, pr, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(rk, rr, rtol=2e-5, atol=2e-7)
+    np.testing.assert_allclose(ck, cr, rtol=2e-5, atol=2e-7)
+
+
+def test_dynamic_hparams_are_traced_operands():
+    """lr/β/wd/clip are kernel operands, not compile-time constants:
+    changing them between calls must not recompile the jitted wrapper."""
+    key = jax.random.PRNGKey(7)
+    p, g, r, c = _mk(key, 64, 128, jnp.float32, jnp.float32, 2.0)
+
+    @jax.jit
+    def step(p, g, r, c, lr, beta, wd, clip):
+        return adalomo_update(p, g, r, c, lr, 2.0, beta, wd, clip,
+                              interpret=True, block=(64, 128))
+
+    outs = [step(p, g, r, c, jnp.float32(lr), jnp.float32(b),
+                 jnp.float32(w), jnp.float32(cl))
+            for lr, b, w, cl in [(1e-3, 0.999, 0.0, 1.0),
+                                 (5e-4, 0.99, 0.1, 2.0),
+                                 (1e-2, 0.9, 0.3, 0.5)]]
+    assert step._cache_size() == 1, "hparam change recompiled the kernel"
+    # and each matches the oracle at its own hparams
+    for (pk, _, _), (lr, b, w, cl) in zip(
+            outs, [(1e-3, 0.999, 0.0, 1.0), (5e-4, 0.99, 0.1, 2.0),
+                   (1e-2, 0.9, 0.3, 0.5)]):
+        pr, _, _ = adalomo_update_ref(p, g, r, c, lr=lr, step=2.0, beta=b,
+                                      weight_decay=w, clip=cl)
         np.testing.assert_allclose(pk, pr, rtol=2e-5, atol=2e-6)
 
 
@@ -93,11 +135,11 @@ def test_property_block_edges(m, n, bm, bn):
     np.testing.assert_allclose(ck, cr, rtol=2e-5, atol=2e-7)
 
 
-def test_kernel_rule_drop_in_trains():
-    """make_kernel_rule() slots into the fused engine and reproduces the
-    pure-jnp rule's trajectory."""
+def test_pallas_backend_drop_in_trains():
+    """get_rule('adalomo', backend='pallas') is the same rule — it slots
+    into the fused engine over the same OptState and reproduces the jnp
+    backend's trajectory (the kernel is a dispatch, not a second rule)."""
     from repro.core import optimizers as opt_lib
-    from repro.core.fused import init_fused_opt_state
     from repro.models.registry import get_arch
     arch = get_arch("h2o-danube-1.8b", smoke=True)
     key = jax.random.PRNGKey(0)
@@ -105,18 +147,25 @@ def test_kernel_rule_drop_in_trains():
     batch = {"tokens": jax.random.randint(key, (2, 16), 0, arch.cfg.vocab),
              "labels": jax.random.randint(key, (2, 16), 0, arch.cfg.vocab)}
     results = []
-    for rule in (opt_lib.get_rule("adalomo"),
-                 make_kernel_rule(interpret=True)):
-        opt_state = init_fused_opt_state(rule, params)
-        step = arch.make_fused_train_step(rule)
+    state_trees = []
+    for opt in (opt_lib.get_opt("adalomo", backend="jnp"),
+                opt_lib.get_opt("adalomo", backend="pallas",
+                                interpret=True, block=(128, 256))):
+        opt_state = opt.init(params)
+        step = arch.make_fused_train_step(opt)
         p, s = params, opt_state
         for _ in range(2):
             p, s, loss, _ = jax.jit(
-                lambda pp, ss, bb: step(pp, ss, bb, lr=jnp.float32(1e-3))
+                lambda pp, ss, bb: step(pp, ss, bb,
+                                        hparams=jnp.float32(1e-3))
             )(p, s, batch)
         results.append((float(loss), p))
+        state_trees.append(s)
     assert abs(results[0][0] - results[1][0]) < 1e-4
     for a, b in zip(jax.tree.leaves(results[0][1]),
                     jax.tree.leaves(results[1][1])):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
                                    atol=1e-5)
+    # one state layout: identical treedefs across backends
+    assert (jax.tree.structure(state_trees[0])
+            == jax.tree.structure(state_trees[1]))

@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.core import optimizers as opt_lib
-from repro.core.fused import init_fused_opt_state
 from repro.models.registry import ARCH_IDS, get_arch
 
 
@@ -29,14 +28,14 @@ def make_batch(arch, key, B=2, S=16):
 @pytest.mark.parametrize("arch_id", ARCH_IDS)
 def test_one_train_step(arch_id):
     arch = get_arch(arch_id, smoke=True)
-    rule = opt_lib.get_rule("adalomo")
+    opt = opt_lib.get_opt("adalomo")
     key = jax.random.PRNGKey(0)
     params = arch.init_params(key)
-    opt_state = init_fused_opt_state(rule, params)
+    opt_state = opt.init(params)
     batch = make_batch(arch, key)
-    step = arch.make_fused_train_step(rule)
+    step = arch.make_fused_train_step(opt)
     p2, s2, loss, metrics = jax.jit(
-        lambda p, s, b: step(p, s, b, lr=jnp.float32(1e-3)))(
+        lambda p, s, b: step(p, s, b, hparams=jnp.float32(1e-3)))(
         params, opt_state, batch)
     assert jnp.isfinite(loss), (arch_id, loss)
     assert float(metrics["ntokens"]) == batch["labels"].size
@@ -50,7 +49,7 @@ def test_one_train_step(arch_id):
         not np.allclose(np.asarray(a), np.asarray(b))
         for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
     assert moved
-    assert int(s2["step"]) == 1
+    assert int(s2.step) == 1
 
 
 @pytest.mark.parametrize("arch_id", ARCH_IDS)

@@ -11,7 +11,6 @@ import numpy as np
 import pytest
 
 from repro.core import optimizers as opt_lib
-from repro.core.fused import init_fused_opt_state
 from repro.data.pipeline import DataConfig, batches
 from repro.models.registry import get_arch
 from repro.train.loop import TrainConfig, Trainer
@@ -87,3 +86,36 @@ def test_checkpoint_resume_roundtrip(tmp_path, arch):
     out2 = trainer.fit(p3, s3, batches(dcfg, start_step=3), start_step=3)
     np.testing.assert_allclose(out2["history"]["loss"][-1],
                                out["history"]["loss"][-1], rtol=1e-4)
+
+
+def test_optstate_step_roundtrips_bitwise(tmp_path, arch):
+    """Opt v2 keeps exactly ONE step counter (OptState.step), and the
+    checkpoint manager round-trips it: save → restore → the next step is
+    bitwise identical to never having checkpointed (the step scalar feeds
+    bias correction, so any drift would change the math)."""
+    from repro.checkpoint.manager import CheckpointManager
+    opt = opt_lib.get_opt("adalomo")
+    key = jax.random.PRNGKey(7)
+    params = arch.init_params(key)
+    state = opt.init(params)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, arch.cfg.vocab),
+             "labels": jax.random.randint(key, (2, 16), 0, arch.cfg.vocab)}
+    step = jax.jit(arch.make_fused_train_step(opt))
+    hp = {"lr": jnp.float32(1e-3)}
+    for _ in range(2):
+        params, state, _, _ = step(params, state, batch, hparams=hp)
+    assert int(state.step) == 2
+
+    mgr = CheckpointManager(tmp_path / "ck", async_write=False)
+    mgr.save(2, (params, state))
+    p0, s0 = arch.init_params(key), opt.init(params)
+    got_step, (p_r, s_r), _ = mgr.restore(2, template=(p0, s0))
+    assert got_step == 2
+    assert int(s_r.step) == 2  # the one step scalar survives the round-trip
+
+    p_live, s_live, _, _ = step(params, state, batch, hparams=hp)
+    p_rest, s_rest, _, _ = step(p_r, s_r, batch, hparams=hp)
+    assert int(s_live.step) == int(s_rest.step) == 3
+    for a, b in zip(jax.tree.leaves((p_live, s_live)),
+                    jax.tree.leaves((p_rest, s_rest))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
