@@ -1,15 +1,14 @@
-"""Shared benchmark helpers: small-scale training comparisons on CPU."""
+"""Shared benchmark helpers: small-scale training comparisons on CPU,
+driven through the Run API (``RunSpec`` + ``run()``)."""
 from __future__ import annotations
 
-import time
-
-import jax
 import jax.numpy as jnp
 
-from repro.data.pipeline import DataConfig, batches
-from repro.models.registry import Arch, get_arch
+from repro.data.pipeline import DataConfig
+from repro.models.registry import Arch
 from repro.models.transformer import LMConfig
-from repro.train.loop import TrainConfig, Trainer
+from repro.run import (EvalSpec, ModelSpec, OptSpec, RunSpec, StepSpec,
+                       TimingHook, run)
 
 
 def tiny_llama(vocab=256, layers=4, d=128) -> Arch:
@@ -29,31 +28,40 @@ LRS = {"adalomo": 1e-2, "adafactor": 1e-2, "adamw": 2e-3, "lomo": 3e-2,
        "sgd": 3e-2, "sgd_momentum": 3e-2, "sgd_variance": 2e-3}
 
 
+def run_spec(arch: Arch, optimizer: str, *, steps=60, batch=8, seq=128,
+             lr=None, fused=None, data_seed=0, eval_every=0,
+             hparams=None, seed=0, schedule="cosine") -> RunSpec:
+    """The benchmark-standard RunSpec for one (arch × optimizer) curve."""
+    return RunSpec(
+        model=ModelSpec(arch=arch.arch_id),
+        data=DataConfig(vocab=arch.cfg.vocab, seq_len=seq,
+                        global_batch=batch, seed=data_seed),
+        opt=OptSpec(name=optimizer, lr=lr if lr is not None
+                    else LRS[optimizer], schedule=schedule,
+                    hparams=hparams or {}),
+        steps=StepSpec(total=steps, fused=fused),
+        eval=EvalSpec(every=eval_every),
+        log_every=0,
+        seed=seed)
+
+
 def train_curve(arch: Arch, optimizer: str, *, steps=60, batch=8, seq=128,
                 lr=None, fused=None, seed=0, data_seed=0,
                 eval_every=0, hparams=None) -> dict:
-    """Train and return {'history', 'us_per_step'}.
+    """Train via ``run()`` and return {'history', 'us_per_step', 'params'}.
 
     ``hparams``: extra dynamic hyperparameters (Opt v2), e.g.
     ``{"weight_decay": 0.01}`` — 1-D params auto-group to no-decay."""
-    fused = fused if fused is not None else optimizer in (
-        "adalomo", "lomo", "sgd")
-    tcfg = TrainConfig(optimizer=optimizer, lr=lr or LRS[optimizer],
-                       total_steps=steps, fused=fused, log_every=0,
-                       eval_every=eval_every, hparams=hparams or {})
-    trainer = Trainer(arch, tcfg, log_fn=lambda s: None)
-    params, opt_state = trainer.init(seed)
-    dcfg = DataConfig(vocab=arch.cfg.vocab, seq_len=seq, global_batch=batch,
-                      seed=data_seed)
-    ev = batches(DataConfig(vocab=arch.cfg.vocab, seq_len=seq,
-                            global_batch=batch, seed=data_seed + 999))
-    t0 = time.time()
-    out = trainer.fit(params, opt_state, batches(dcfg),
-                      eval_iter=ev if eval_every else None)
-    wall = time.time() - t0
-    return {"history": out["history"],
-            "us_per_step": wall / steps * 1e6,
-            "params": out["params"]}
+    spec = run_spec(arch, optimizer, steps=steps, batch=batch, seq=seq,
+                    lr=lr, fused=fused, data_seed=data_seed,
+                    eval_every=eval_every, hparams=hparams, seed=seed)
+    # eval (when enabled) uses run()'s default held-out stream: the same
+    # data seed offset the old hand-built iterator used, but resumable.
+    timing = TimingHook()
+    res = run(spec, arch=arch, hooks=(timing,), log_fn=lambda s: None)
+    return {"history": res.history,
+            "us_per_step": timing.us_per_step,
+            "params": res.params}
 
 
 def fmt_row(name: str, us: float, derived: str) -> str:

@@ -6,9 +6,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import fmt_row, tiny_llama, train_curve
-from repro.data.pipeline import DataConfig, batches
-from repro.train.loop import TrainConfig, Trainer
+from benchmarks.common import fmt_row, run_spec, tiny_llama, train_curve
+from repro.run import run as run_api
 
 
 def run(fast: bool = True) -> list:
@@ -19,19 +18,17 @@ def run(fast: bool = True) -> list:
     rows = []
     finals = {}
     for opt in ("adalomo", "adamw"):
-        # stage 2: further pre-train on domain B (shifted distribution).
-        # paper lr ratio (Table 6): AdaLomo ≈ 30× AdamW's
-        tcfg = TrainConfig(optimizer=opt,
-                           lr=2e-2 if opt == "adalomo" else 1e-3,
-                           total_steps=steps,
-                           fused=opt == "adalomo", log_every=0)
-        trainer = Trainer(arch, tcfg, log_fn=lambda s: None)
-        opt_state = trainer.opt.init(base["params"])
-        dcfg = DataConfig(vocab=arch.cfg.vocab, seq_len=128, global_batch=8,
-                          seed=4242)  # domain shift
-        out = trainer.fit(jax.tree.map(jnp.copy, base["params"]), opt_state,
-                          batches(dcfg))
-        h = out["history"]
+        # stage 2: further pre-train on domain B (shifted distribution),
+        # warm-started from the stage-1 params via the Run API's params
+        # override.  Paper lr ratio (Table 6): AdaLomo ≈ 30× AdamW's.
+        spec = run_spec(arch, opt, steps=steps,
+                        lr=2e-2 if opt == "adalomo" else 1e-3,
+                        fused=opt == "adalomo",
+                        data_seed=4242)  # domain shift
+        out = run_api(spec, arch=arch,
+                      params=jax.tree.map(jnp.copy, base["params"]),
+                      log_fn=lambda s: None)
+        h = out.history
         finals[opt] = h["loss"][-1]
         rows.append(fmt_row(
             f"fig23/{opt}", 0.0,

@@ -9,45 +9,33 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
-from benchmarks.common import fmt_row, tiny_llama
-from repro.core import optimizers as opt_lib
+from benchmarks.common import fmt_row, run_spec, tiny_llama
+from repro.run import build_step_program
 
 B, S = 8, 256
 
 
 def _measure(arch, rule_name, fused):
-    opt = opt_lib.get_opt(rule_name)
+    spec = run_spec(arch, rule_name, steps=8, batch=B, seq=S, lr=1e-3,
+                    fused=fused)
+    program = build_step_program(spec, arch)
+    params, opt_state = program.init(0)
     key = jax.random.PRNGKey(0)
-    params = arch.init_params(key)
-    opt_state = opt.init(params)
     batch = {"tokens": jax.random.randint(key, (B, S), 0, arch.cfg.vocab),
              "labels": jax.random.randint(key, (B, S), 0, arch.cfg.vocab)}
-    hp = {"lr": jnp.float32(1e-3)}
-    if fused:
-        step = arch.make_fused_train_step(opt)
-        fn = lambda p, s, b: step(p, s, b, hparams=hp)  # noqa: E731
-    else:
-        loss_fn = arch.make_loss_fn()
-
-        def fn(p, s, b):
-            (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b)
-            p2, s2 = opt.step(p, g, s, hp)
-            return p2, s2, loss, m
-
-    jf = jax.jit(fn, donate_argnums=(0, 1))
-    compiled = jf.lower(params, opt_state, batch).compile()
+    hp = program.hparams_fn(1)
+    compiled = program.lower().compile()
     ma = compiled.memory_analysis()
     peak = ma.temp_size_in_bytes + ma.argument_size_in_bytes
     # throughput (post-warmup)
     p, s = params, opt_state
-    p, s, *_ = jf(p, s, batch)
+    p, s, *_ = program.step(p, s, batch, hp)
     jax.block_until_ready(jax.tree.leaves(p)[0])
     t0 = time.time()
     n = 8
     for _ in range(n):
-        p, s, loss, m = jf(p, s, batch)
+        p, s, loss, m = program.step(p, s, batch, hp)
     jax.block_until_ready(loss)
     dt = (time.time() - t0) / n
     return {"peak_MB": peak / 1e6, "tgs": B * S / dt, "us": dt * 1e6}

@@ -9,7 +9,6 @@ Two views:
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import optimizers as opt_lib
 from benchmarks.common import fmt_row, tiny_llama
@@ -40,33 +39,19 @@ def analytic_rows(arch_ids=("h2o-danube-1.8b", "qwen3-32b",
 
 
 def structural_check() -> dict:
-    """Compiled temp bytes: fused-AdaLomo vs unfused-AdamW on one model."""
+    """Compiled temp bytes: fused-AdaLomo vs unfused-AdamW on one model.
+    Each variant is the Run API's own StepProgram, lowered on its abstract
+    signature — the same program the launcher would train."""
+    from benchmarks.common import run_spec
+    from repro.run import build_step_program
     arch = tiny_llama(layers=6, d=256)
-    key = jax.random.PRNGKey(0)
-    params = arch.init_params(key)
-    batch = {"tokens": jnp.zeros((8, 256), jnp.int32),
-             "labels": jnp.zeros((8, 256), jnp.int32)}
-    hp = {"lr": jnp.float32(1e-3)}
     out = {}
     for name, rule_name, fused in [("adalomo_fused", "adalomo", True),
                                    ("adamw_unfused", "adamw", False),
                                    ("lomo_fused", "lomo", True)]:
-        opt = opt_lib.get_opt(rule_name)
-        opt_state = opt.init(params)
-        if fused:
-            step = arch.make_fused_train_step(opt)
-            fn = lambda p, s, b: step(p, s, b, hparams=hp)  # noqa: E731
-        else:
-            loss_fn = arch.make_loss_fn()
-
-            def fn(p, s, b, _loss_fn=loss_fn, _opt=opt):
-                (loss, m), g = jax.value_and_grad(_loss_fn, has_aux=True)(
-                    p, b)
-                p2, s2 = _opt.step(p, g, s, hp)
-                return p2, s2, loss, m
-
-        c = jax.jit(fn, donate_argnums=(0, 1)).lower(
-            params, opt_state, batch).compile()
+        spec = run_spec(arch, rule_name, steps=1, batch=8, seq=256,
+                        lr=1e-3, fused=fused)
+        c = build_step_program(spec, arch).lower().compile()
         ma = c.memory_analysis()
         out[name] = {"temp": int(ma.temp_size_in_bytes),
                      "args": int(ma.argument_size_in_bytes)}

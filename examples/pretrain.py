@@ -1,7 +1,7 @@
 """End-to-end pre-training driver (deliverable b): trains a ~100M-param
 LLaMA-architecture model from scratch with AdaLomo for a few hundred steps
 on the synthetic corpus, with checkpointing and eval — the CPU-scale
-version of the paper's §4.3 / Figure 4 run.
+version of the paper's §4.3 / Figure 4 run, expressed as one RunSpec.
 
   PYTHONPATH=src python examples/pretrain.py [--steps 300] [--optimizer adamw]
 
@@ -9,13 +9,11 @@ version of the paper's §4.3 / Figure 4 run.
 """
 import argparse
 
-import jax
-
-from repro.checkpoint.manager import CheckpointManager
-from repro.data.pipeline import DataConfig, batches
+from repro.data.pipeline import DataConfig
 from repro.models.registry import Arch
 from repro.models.transformer import LMConfig
-from repro.train.loop import TrainConfig, Trainer
+from repro.run import (CheckpointSpec, EvalSpec, FaultSpec, ModelSpec,
+                       OptSpec, RunSpec, StepSpec, StragglerHook, run)
 
 
 def model_100m() -> Arch:
@@ -55,24 +53,23 @@ def main():
            "lomo": 1e-2}
     hparams = ({} if args.weight_decay is None
                else {"weight_decay": args.weight_decay})
-    tcfg = TrainConfig(optimizer=args.optimizer, lr=lrs[args.optimizer],
-                       total_steps=args.steps, fused=args.optimizer in
-                       ("adalomo", "lomo", "sgd"),
-                       eval_every=max(args.steps // 5, 1), ckpt_every=100,
-                       log_every=10, heartbeat_timeout_s=600,
-                       hparams=hparams)
-    trainer = Trainer(arch, tcfg)
-    params, opt_state = trainer.init(0)
-    dcfg = DataConfig(vocab=arch.cfg.vocab, seq_len=args.seq,
-                      global_batch=args.batch, seed=0)
-    ev = batches(DataConfig(vocab=arch.cfg.vocab, seq_len=args.seq,
-                            global_batch=args.batch, seed=777))
-    ckpt = CheckpointManager(args.ckpt_dir, keep_last=2)
-    out = trainer.fit(params, opt_state, batches(dcfg), eval_iter=ev,
-                      ckpt_manager=ckpt)
-    h = out["history"]
+    spec = RunSpec(
+        model=ModelSpec(arch=arch.arch_id),
+        data=DataConfig(vocab=arch.cfg.vocab, seq_len=args.seq,
+                        global_batch=args.batch, seed=0),
+        opt=OptSpec(name=args.optimizer, lr=lrs[args.optimizer],
+                    hparams=hparams),
+        steps=StepSpec(total=args.steps),
+        checkpoint=CheckpointSpec(dir=args.ckpt_dir, every=100,
+                                  keep_last=2),
+        eval=EvalSpec(every=max(args.steps // 5, 1)),
+        fault=FaultSpec(heartbeat_timeout_s=600),
+        log_every=10)
+    res = run(spec, arch=arch)
+    h = res.history
+    straggler = res.find_hook(StragglerHook)
     print(f"loss {h['loss'][0]:.3f} -> {h['loss'][-1]:.3f}; "
-          f"stragglers observed: {len(trainer.straggler.events)}")
+          f"stragglers observed: {len(straggler.monitor.events)}")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,10 @@ serializable ``OptState(step, moments)`` pytree, and every train step takes
 an ``hparams`` dict — so lr/β/weight-decay schedules and per-group
 overrides are plain data, changed per step with zero recompiles.
 
+Steps 1-4 drive the pieces by hand; step 5 is the same thing as one
+declarative ``RunSpec`` through the Run API (DESIGN.md §"Run API v1") —
+what ``launch/train.py``, the benchmarks, and the dry-run all build on.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
@@ -49,3 +53,21 @@ for i in range(10):
                                             hparams=hp)
     print(f"step {int(opt_state.step)}: loss={float(loss):.4f} "
           f"acc={float(metrics['accuracy']):.3f}")
+
+# 5. the same run, declaratively (Run API v1): one serializable RunSpec,
+#    one entrypoint — run() builds the identical fused step program
+#    (which launch/dryrun.py can lower without training), wires the hook
+#    pipeline (history/logging/eval/checkpoint), and drives the loop.
+from repro.data.pipeline import DataConfig  # noqa: E402
+from repro.run import ModelSpec, OptSpec, RunSpec, StepSpec, run  # noqa: E402
+
+spec = RunSpec(model=ModelSpec("h2o-danube-1.8b", smoke=True),
+               data=DataConfig(vocab=arch.cfg.vocab, seq_len=64,
+                               global_batch=4),
+               opt=OptSpec(name="adalomo", lr=1e-3,
+                           hparams={"weight_decay": 0.01}),
+               steps=StepSpec(total=5), log_every=0)
+print("RunSpec round-trips:", RunSpec.from_json(spec.to_json()) == spec)
+result = run(spec, log_fn=lambda s: None)
+print(f"run(): final loss {result.history['loss'][-1]:.4f} in "
+      f"{len(result.history['step'])} steps")

@@ -14,17 +14,21 @@ ARGS=(-x -q)
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${FAST:-0}" == "1" ]]; then
-  # Fast tier leads with the Opt v2 contract guards — in particular the
-  # zero-recompile-under-hparam-schedule assertions (tests/core/test_api.py)
-  # — so an accidental retrace of the train step fails in seconds, before
-  # the wider suite runs (which then skips that file to stay within the
+  # Fast tier leads with the contract guards: the Opt v2 zero-recompile-
+  # under-hparam-schedule assertions (tests/core/test_api.py) and the
+  # Run API smoke (tests/run: RunSpec JSON round-trip, a short synthetic
+  # run + checkpoint resume through run(), and the jit cache-size proof
+  # that the hook pipeline adds zero steady-state recompiles) — so an
+  # accidental retrace or run-layer regression fails in seconds, before
+  # the wider suite runs (which then skips those paths to stay within the
   # single TIMEOUT_S wall-clock bound).
   SECONDS=0
-  timeout "$TIMEOUT_S" python -m pytest tests/core/test_api.py -q
+  timeout "$TIMEOUT_S" python -m pytest tests/core/test_api.py tests/run \
+      -m "not slow" -q
   TIMEOUT_S=$((TIMEOUT_S - SECONDS))
   # `timeout 0` would DISABLE the bound entirely — clamp to >= 1s.
   if (( TIMEOUT_S < 1 )); then TIMEOUT_S=1; fi
-  ARGS+=(-m "not slow" --ignore=tests/core/test_api.py)
+  ARGS+=(-m "not slow" --ignore=tests/core/test_api.py --ignore=tests/run)
 fi
 
 exec timeout "$TIMEOUT_S" python -m pytest "${ARGS[@]}" "$@"

@@ -41,12 +41,30 @@ def _flatten_with_paths(tree):
 
 class CheckpointManager:
     def __init__(self, directory: str | Path, *, keep_last: int = 3,
-                 async_write: bool = True):
+                 async_write: bool = True, gc_incomplete: bool = False):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep_last = keep_last
         self.async_write = async_write
         self._thread: Optional[threading.Thread] = None
+        if gc_incomplete:
+            self.gc_incomplete()
+
+    def gc_incomplete(self) -> list[str]:
+        """Remove crash-orphaned partial checkpoints: ``_tmp_step_*``
+        staging dirs and any ``step_*`` dir missing its ``_COMPLETE``
+        marker.  Discovery (``_complete_steps``) already ignores them, so
+        this is pure disk hygiene — restore semantics are unchanged.
+        Returns the removed dir names."""
+        removed = []
+        for p in sorted(self.dir.glob("_tmp_step_*")):
+            shutil.rmtree(p, ignore_errors=True)
+            removed.append(p.name)
+        for p in sorted(self.dir.glob("step_*")):
+            if p.is_dir() and not (p / "_COMPLETE").exists():
+                shutil.rmtree(p, ignore_errors=True)
+                removed.append(p.name)
+        return removed
 
     # ---------------- save ----------------
     def save(self, step: int, tree: Any, *, extra: Optional[dict] = None):

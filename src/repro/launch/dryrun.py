@@ -25,7 +25,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / \
     "artifacts" / "dryrun"
@@ -134,10 +133,14 @@ def build_cell(arch_id: str, shape_name: str, mesh, *,
     """Return (fn, example_args: tuple of SDS pytrees, in_shardings,
     out_shardings, donate_argnums, meta).
 
+    Train cells build through ``repro.run.build_step_program`` — the same
+    step-program constructor ``launch/train.py`` executes — so the dry-run
+    lowers the identical program it would train (Run API v1 contract; no
+    drift between the compiled artifact and production training).
+
     ``optimized=False`` reproduces the paper-faithful baseline: no
     activation-sharding policy, no gradient reduce-scatter constraint
     (EXPERIMENTS.md §Perf records both)."""
-    from repro.core import optimizers as opt
     from repro.configs.shapes import SHAPES
     from repro.models.registry import get_arch
     from repro.sharding import rules as R
@@ -167,28 +170,34 @@ def build_cell(arch_id: str, shape_name: str, mesh, *,
             "global_batch": sh.global_batch, "seq_len": sh.seq_len}
 
     if sh.kind == "train":
-        optv2 = opt.get_opt("adalomo")
-        opt_sds = jax.eval_shape(lambda: optv2.init(params_sds))
-        o_specs = R.opt_pspecs(opt_sds, params_sds, p_specs, axes)
-        o_shard = R.to_shardings(o_specs, mesh)
+        from repro.data.pipeline import DataConfig
+        from repro.run import (MeshSpec, ModelSpec, OptSpec, RunSpec,
+                               StepSpec, build_step_program)
         rc = R.make_residual_constraint(mesh, axes)
         gc = (R.make_grad_constraint(mesh, axes, params_sds)
               if optimized else None)
         pc = (R.make_param_constraint(mesh, axes, params_sds)
               if optimized else None)
-        step_kw = arch.make_fused_train_step(optv2, residual_constraint=rc,
-                                             grad_constraint=gc,
-                                             param_constraint=pc)
-
-        def fn(params, opt_state, batch, lr):
-            return step_kw(params, opt_state, batch, hparams={"lr": lr})
-
+        spec = RunSpec(
+            model=ModelSpec(arch=arch_id),
+            data=DataConfig(vocab=arch.cfg.vocab, seq_len=sh.seq_len,
+                            global_batch=sh.global_batch),
+            opt=OptSpec(name="adalomo", schedule="constant"),
+            steps=StepSpec(total=1, fused=True),
+            mesh=MeshSpec(kind="multi" if mesh.devices.size > 256
+                          else "single", optimized=optimized))
+        program = build_step_program(spec, arch, residual_constraint=rc,
+                                     grad_constraint=gc,
+                                     param_constraint=pc)
+        args = program.abstract_args()
+        opt_sds = args[1]
+        o_specs = R.opt_pspecs(opt_sds, params_sds, p_specs, axes)
+        o_shard = R.to_shardings(o_specs, mesh)
         scalar = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
-        in_sh = (p_shard, o_shard, b_shard, scalar)
+        hp_shard = jax.tree.map(lambda _: scalar, args[3])
+        in_sh = (p_shard, o_shard, b_shard, hp_shard)
         out_sh = (p_shard, o_shard, scalar, scalar)
-        args = (params_sds, opt_sds, batch_sds,
-                jax.ShapeDtypeStruct((), jnp.float32))
-        return fn, args, in_sh, out_sh, (0, 1), meta
+        return program.fn, args, in_sh, out_sh, (0, 1), meta
 
     if sh.kind == "prefill":
         if arch.family == "encdec":

@@ -1,123 +1,98 @@
-"""Production training launcher.
+"""Production training launcher — RunSpec parsing + ``run()`` (Run API v1).
 
   PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
       --smoke --steps 100 --optimizer adalomo --batch 8 --seq 128
 
+  PYTHONPATH=src python -m repro.launch.train --spec runspec.json
+
 On a real cluster this binary runs once per host (jax.distributed
 initializes from the standard env vars); in this container it runs
-single-process, optionally with a virtual-device mesh (--virtual-devices N,
-must come first — device count locks at first jax use).
+single-process, optionally with a virtual-device mesh (--virtual-devices N
+or --virtual-devices=N; must be handled before any jax import because the
+device count locks at first jax use).
 """
 import os
 import sys
 
-if "--virtual-devices" in sys.argv:  # must precede any jax import
-    _n = sys.argv[sys.argv.index("--virtual-devices") + 1]
+
+def parse_virtual_devices(argv) -> int | None:
+    """Extract --virtual-devices from raw argv, before argparse/jax.
+
+    Accepts both ``--virtual-devices N`` and ``--virtual-devices=N``;
+    raises SystemExit with a clear message when the value is missing or
+    not a positive integer (the old raw-index arithmetic crashed with an
+    IndexError/ValueError on the ``=`` form or a trailing flag).
+    """
+    val = None
+    for i, a in enumerate(argv):
+        if a == "--virtual-devices":
+            if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
+                raise SystemExit(
+                    "--virtual-devices requires a value (an integer >= 1)")
+            val = argv[i + 1]
+        elif a.startswith("--virtual-devices="):
+            val = a.split("=", 1)[1]
+        else:
+            continue
+        if not val.isdigit() or int(val) < 1:
+            raise SystemExit(
+                f"--virtual-devices: expected an integer >= 1, got {val!r}")
+        return int(val)
+    return None
+
+
+_n = parse_virtual_devices(sys.argv[1:]) if __name__ == "__main__" else None
+if _n:
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                                f" --xla_force_host_platform_device_count={_n}")
 
-import argparse  # noqa: E402
-import json  # noqa: E402
-
-import jax  # noqa: E402
-
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true",
-                    help="use the reduced smoke config")
-    ap.add_argument("--optimizer", default="adalomo")
-    ap.add_argument("--lr", type=float, default=None)
-    ap.add_argument("--weight-decay", type=float, default=None,
-                    help="decoupled weight decay (Opt v2 dynamic hparam; "
-                         "1-D params are auto-grouped to no-decay)")
-    ap.add_argument("--opt-backend", default=None,
-                    choices=["auto", "jnp", "pallas"],
-                    help="AdaLomo update backend (Pallas kernel on TPU)")
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--unfused", action="store_true")
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=0)
-    ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--eval-every", type=int, default=0)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--virtual-devices", type=int, default=None)
-    ap.add_argument("--history-out", default=None)
+    import argparse
+    import json
+
+    from repro.run.spec import RunSpec, add_cli_args, from_cli_args
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    add_cli_args(ap)
+    ap.add_argument("--spec", default=None,
+                    help="RunSpec JSON file (overrides the other flags)")
+    ap.add_argument("--virtual-devices", type=int, default=None,
+                    help="host-platform device count (handled pre-import)")
+    ap.add_argument("--history-out", default=None,
+                    help="write the training history JSON here")
     args = ap.parse_args(argv)
 
-    from repro.checkpoint.manager import CheckpointManager
-    from repro.data.pipeline import DataConfig, batches
-    from repro.models.registry import get_arch
-    from repro.train.loop import TrainConfig, Trainer
+    if args.spec:
+        with open(args.spec) as f:
+            spec = RunSpec.from_json(f.read())
+    else:
+        spec = from_cli_args(args)
 
-    # Paper hyper-parameters (Table 6/7): AdaLomo lr ≈ 5e-4 (IT) / 1e-3
-    # (pretrain); AdamW 1e-5..2e-5; LOMO/SGD 1e-2.
-    default_lr = {"adalomo": 5e-4, "adafactor": 5e-4, "adamw": 2e-5,
-                  "lomo": 1e-2, "sgd": 1e-2, "sgd_momentum": 1e-2,
-                  "sgd_variance": 5e-4}
-    lr = args.lr if args.lr is not None else default_lr.get(args.optimizer,
-                                                            1e-3)
-    arch = get_arch(args.arch, smoke=args.smoke)
-    hparams = ({} if args.weight_decay is None
-               else {"weight_decay": args.weight_decay})
-    opt_kwargs = ({} if args.opt_backend is None
-                  else {"backend": args.opt_backend})
-    tcfg = TrainConfig(optimizer=args.optimizer, lr=lr,
-                       total_steps=args.steps, fused=not args.unfused,
-                       microbatches=args.microbatches,
-                       eval_every=args.eval_every,
-                       ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
-                       hparams=hparams, opt_kwargs=opt_kwargs)
-    trainer = Trainer(arch, tcfg)
-    params, opt_state = trainer.init(args.seed)
+    if args.virtual_devices:
+        # The XLA flag only takes effect when set before jax initializes —
+        # the module-level pre-parse does that for CLI invocations.  Catch
+        # programmatic main() calls where it can no longer apply.
+        import jax
+        if jax.device_count() < args.virtual_devices:
+            raise SystemExit(
+                f"--virtual-devices={args.virtual_devices} had no effect "
+                f"({jax.device_count()} device(s) visible): the flag must "
+                "be processed before jax initializes — invoke via "
+                "`python -m repro.launch.train` on the command line")
 
-    dcfg = DataConfig(vocab=arch.cfg.vocab, seq_len=args.seq,
-                      global_batch=args.batch, seed=args.seed)
-    start_step = 0
-    ckpt = None
-    if args.ckpt_dir:
-        ckpt = CheckpointManager(args.ckpt_dir)
-        if args.resume and ckpt.latest_step() is not None:
-            start_step, (params, opt_state), extra = ckpt.restore(
-                template=(params, opt_state))
-            print(f"resumed from step {start_step}")
+    from repro.run import run
 
-    def batch_with_extras():
-        need_frames = arch.family == "encdec"
-        import numpy as np
-        rng = np.random.default_rng(args.seed)
-        for b in batches(dcfg, start_step):
-            if need_frames:
-                b = dict(b)
-                b["frames"] = rng.standard_normal(
-                    (args.batch, arch.cfg.n_frames, arch.cfg.d_model),
-                    dtype=np.float32)
-            if getattr(arch.cfg, "prefix_lm", False):
-                b = dict(b)
-                b["prefix_embed"] = rng.standard_normal(
-                    (args.batch, arch.cfg.n_prefix_tokens,
-                     arch.cfg.d_model), dtype=np.float32)
-                b["prefix_len"] = np.full(
-                    (args.batch,), arch.cfg.n_prefix_tokens, np.int32)
-            if getattr(arch.cfg, "mtp", False):
-                b = dict(b)
-                lab = b["labels"]
-                b["labels_mtp"] = np.concatenate(
-                    [lab[:, 1:], -np.ones((lab.shape[0], 1), np.int32)], 1)
-            yield b
-
-    out = trainer.fit(params, opt_state, batch_with_extras(),
-                      start_step=start_step,
-                      eval_iter=batch_with_extras() if args.eval_every else None,
-                      ckpt_manager=ckpt)
+    result = run(spec)
     if args.history_out:
         with open(args.history_out, "w") as f:
-            json.dump(out["history"], f)
-    print(f"final loss {out['history']['loss'][-1]:.4f}")
+            json.dump(result.history, f)
+    if result.history.get("loss"):
+        print(f"final loss {result.history['loss'][-1]:.4f}")
+    else:
+        # --resume found the run already at total_steps: a no-op resume
+        print(f"nothing to do: resumed at step {result.start_step} of "
+              f"{spec.steps.total}")
 
 
 if __name__ == "__main__":

@@ -129,28 +129,37 @@ class Arch:
         cells = cells_for(self.arch_id)
         return cells
 
+    def train_batch_specs(self, batch: int, seq_len: int,
+                          *, labels: bool = True) -> dict:
+        """ShapeDtypeStruct train batch for an explicit (batch, seq_len) —
+        the signature contract between the data layer
+        (``repro.run.data.make_batch_iter`` yields exactly these leaves)
+        and the step program (``StepProgram.abstract_args`` lowers on
+        them).  ``labels=False`` gives the prefill subset."""
+        cfg = self.cfg
+        B, S = batch, seq_len
+        out = {"tokens": SDS((B, S), jnp.int32)}
+        if labels:
+            out["labels"] = SDS((B, S), jnp.int32)
+        if self.family == "encdec":
+            out["frames"] = SDS((B, cfg.n_frames, cfg.d_model),
+                                jnp.float32)
+        if getattr(cfg, "prefix_lm", False):
+            out["prefix_embed"] = SDS((B, cfg.n_prefix_tokens, cfg.d_model),
+                                      jnp.float32)
+            out["prefix_len"] = SDS((B,), jnp.int32)
+        if getattr(cfg, "mtp", False) and labels:
+            out["labels_mtp"] = SDS((B, S), jnp.int32)
+        return out
+
     def input_specs(self, shape_name: str) -> dict:
         """ShapeDtypeStruct batch for the given assigned shape."""
         sh = SHAPES[shape_name]
-        cfg = self.cfg
-        B = sh.global_batch
         if sh.kind in ("train", "prefill"):
-            S = sh.seq_len
-            batch = {"tokens": SDS((B, S), jnp.int32)}
-            if sh.kind == "train":
-                batch["labels"] = SDS((B, S), jnp.int32)
-            if self.family == "encdec":
-                batch["frames"] = SDS((B, cfg.n_frames, cfg.d_model),
-                                      jnp.float32)
-            if getattr(cfg, "prefix_lm", False):
-                batch["prefix_embed"] = SDS((B, cfg.n_prefix_tokens,
-                                             cfg.d_model), jnp.float32)
-                batch["prefix_len"] = SDS((B,), jnp.int32)
-            if getattr(cfg, "mtp", False) and sh.kind == "train":
-                batch["labels_mtp"] = SDS((B, S), jnp.int32)
-            return batch
+            return self.train_batch_specs(sh.global_batch, sh.seq_len,
+                                          labels=sh.kind == "train")
         # decode: one new token against a seq_len-deep cache
-        return {"tokens": SDS((B, 1), jnp.int32)}
+        return {"tokens": SDS((sh.global_batch, 1), jnp.int32)}
 
     def cache_specs(self, shape_name: str) -> Any:
         sh = SHAPES[shape_name]

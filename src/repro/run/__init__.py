@@ -1,0 +1,29 @@
+"""Run API v1 — declarative RunSpec + composable step program + hook
+pipeline: one entrypoint for train / dryrun / benchmarks (DESIGN.md
+§"Run API v1").
+
+    spec = RunSpec(model=ModelSpec("h2o-danube-1.8b", smoke=True),
+                   data=DataConfig(vocab=0, seq_len=128, global_batch=8),
+                   opt=OptSpec(name="adalomo"), steps=StepSpec(total=100))
+    result = run(spec)                     # result.history, result.params
+
+    program = build_step_program(spec)     # the same jitted step dryrun
+    program.lower()                        # lowers — no loop duplication
+"""
+from repro.run.hooks import (CheckpointHook, EvalHook, HeartbeatHook,
+                             HistoryHook, Hook, LoggingHook, StepEvent,
+                             StragglerHook, TimingHook)
+from repro.run.program import StepProgram, build_step_program
+from repro.run.runner import RunContext, RunResult, run
+from repro.run.spec import (DEFAULT_LRS, CheckpointSpec, EvalSpec,
+                            FaultSpec, MeshSpec, ModelSpec, OptSpec,
+                            RunSpec, StepSpec)
+
+__all__ = [
+    "RunSpec", "ModelSpec", "OptSpec", "StepSpec", "MeshSpec",
+    "CheckpointSpec", "EvalSpec", "FaultSpec", "DEFAULT_LRS",
+    "StepProgram", "build_step_program",
+    "Hook", "StepEvent", "HistoryHook", "LoggingHook", "EvalHook",
+    "CheckpointHook", "HeartbeatHook", "StragglerHook", "TimingHook",
+    "run", "RunResult", "RunContext",
+]

@@ -1,0 +1,70 @@
+"""Run-layer data plumbing: arch-aware batch iterators.
+
+The token pipeline (``repro.data.pipeline``) is family-agnostic; some
+architectures need extra per-batch inputs (encoder frames for encdec,
+prefix embeddings for prefix-LM, shifted labels for MTP).  This module
+owns that adaptation — previously copy-pasted inside ``launch/train.py``
+— keyed *per step* so resume reproduces the exact same extras the
+uninterrupted run would have seen (the pipeline's stateless-given-step
+contract extends to the extras).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from repro.data.pipeline import DataConfig, batches
+from repro.run.spec import RunSpec
+
+
+def resolved_data(spec: RunSpec, arch) -> DataConfig:
+    """The spec's DataConfig with ``vocab=0`` resolved to the arch vocab."""
+    if spec.data is None:
+        raise ValueError("spec.data is required to build a batch iterator")
+    if spec.data.vocab:
+        return spec.data
+    return dataclasses.replace(spec.data, vocab=arch.cfg.vocab)
+
+
+def _with_extras(b: dict, arch, cfg: DataConfig, step: int) -> dict:
+    need_frames = arch.family == "encdec"
+    prefix = getattr(arch.cfg, "prefix_lm", False)
+    mtp = getattr(arch.cfg, "mtp", False)
+    if not (need_frames or prefix or mtp):
+        return b
+    b = dict(b)
+    B = cfg.local_batch
+    rng = np.random.default_rng((cfg.seed, 0x5eed, step))
+    if need_frames:
+        b["frames"] = rng.standard_normal(
+            (B, arch.cfg.n_frames, arch.cfg.d_model), dtype=np.float32)
+    if prefix:
+        b["prefix_embed"] = rng.standard_normal(
+            (B, arch.cfg.n_prefix_tokens, arch.cfg.d_model),
+            dtype=np.float32)
+        b["prefix_len"] = np.full((B,), arch.cfg.n_prefix_tokens, np.int32)
+    if mtp:
+        lab = b["labels"]
+        b["labels_mtp"] = np.concatenate(
+            [lab[:, 1:], -np.ones((lab.shape[0], 1), np.int32)], 1)
+    return b
+
+
+def make_batch_iter(spec: RunSpec, arch, start_step: int = 0,
+                    *, seed_offset: int = 0) -> Iterator[dict]:
+    """Deterministic, resumable batch stream matching
+    ``arch.train_batch_specs`` leaf-for-leaf.  ``seed_offset`` derives a
+    disjoint stream from the same spec (held-out eval)."""
+    cfg = resolved_data(spec, arch)
+    if seed_offset:
+        cfg = dataclasses.replace(cfg, seed=cfg.seed + seed_offset)
+    step = start_step
+    for b in batches(cfg, start_step):
+        yield _with_extras(b, arch, cfg, step)
+        step += 1
+
+
+# Seed offset for the default held-out eval stream.
+EVAL_SEED_OFFSET = 999

@@ -1,0 +1,249 @@
+"""The hook pipeline: checkpoint, eval, logging, fault and history capture
+as ordered callbacks on a five-event protocol.
+
+Events (dispatched in hook-list order by ``repro.run.runner.run``):
+
+  ``on_run_start(ctx)``                 once, after init/restore, before
+                                        the first step;
+  ``on_step_end(ctx, ev)``              after every completed step, with a
+                                        :class:`StepEvent`;
+  ``on_eval(ctx, step, metrics)``       whenever an evaluation ran
+                                        (emitted by :class:`EvalHook` via
+                                        ``ctx.dispatch_eval`` — every hook
+                                        sees it, so history capture and
+                                        logging don't special-case eval);
+  ``on_recover(ctx, restored_step)``    fault recovery rewound the run to
+                                        ``restored_step``: hooks that
+                                        accumulate per-step state must
+                                        discard entries at/after it, or
+                                        they double-count the re-executed
+                                        steps;
+  ``on_exit(ctx)``                      once, after the last step (also on
+                                        the exception path), for draining
+                                        async work.
+
+Hooks are host-side only: they read ``ctx.params/opt_state`` and device
+scalars but never feed anything back into the jitted step, which is why
+the pipeline adds **zero steady-state recompiles** (asserted in
+``tests/run/test_hooks.py``).  The default pipeline order (straggler →
+heartbeat → history → logging → eval → checkpoint) puts measurement
+before side effects: a checkpoint at step N always contains exactly the
+state whose metrics step N's hooks observed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+from repro.train.fault import Heartbeat, StragglerMonitor
+
+
+@dataclasses.dataclass
+class StepEvent:
+    """What ``on_step_end`` sees: the 0-based step index, device scalars
+    (loss, metrics dict), the hparams pytree the step ran with, and the
+    host wall-clock seconds since the previous step."""
+
+    step: int
+    loss: Any
+    metrics: Any
+    hparams: dict
+    dt: float
+
+
+class Hook:
+    """Base class: every event defaults to a no-op, so hooks implement
+    only what they observe."""
+
+    def on_run_start(self, ctx) -> None:
+        pass
+
+    def on_step_end(self, ctx, ev: StepEvent) -> None:
+        pass
+
+    def on_eval(self, ctx, step: int, metrics: dict) -> None:
+        pass
+
+    def on_recover(self, ctx, restored_step: int) -> None:
+        """Fault recovery rewound the run to ``restored_step``; hooks that
+        accumulate per-step state discard everything at or after it so the
+        final record matches an uninterrupted run."""
+        pass
+
+    def on_exit(self, ctx) -> None:
+        pass
+
+
+class HistoryHook(Hook):
+    """Captures the training curve — the benchmarks' history dict
+    (kept key-compatible with the old ``Trainer.fit`` output)."""
+
+    def __init__(self):
+        self.history = {"step": [], "loss": [], "accuracy": [], "lr": [],
+                        "eval_loss": [], "eval_step": []}
+
+    def on_step_end(self, ctx, ev: StepEvent) -> None:
+        self.history["step"].append(ev.step)
+        self.history["loss"].append(float(ev.loss))
+        self.history["accuracy"].append(float(ev.metrics["accuracy"]))
+        self.history["lr"].append(float(ev.hparams["lr"]))
+
+    def on_eval(self, ctx, step: int, metrics: dict) -> None:
+        self.history["eval_loss"].append(metrics["loss"])
+        self.history["eval_step"].append(step)
+
+    def on_recover(self, ctx, restored_step: int) -> None:
+        h = self.history
+        keep = sum(1 for s in h["step"] if s < restored_step)
+        for k in ("step", "loss", "accuracy", "lr"):
+            del h[k][keep:]
+        keep_ev = sum(1 for s in h["eval_step"] if s < restored_step)
+        for k in ("eval_loss", "eval_step"):
+            del h[k][keep_ev:]
+
+
+class LoggingHook(Hook):
+    def __init__(self, every: int, log_fn: Callable[[str], None] = print,
+                 total: Optional[int] = None):
+        self.every = every
+        self.log = log_fn
+        self.total = total
+
+    def on_step_end(self, ctx, ev: StepEvent) -> None:
+        last = self.total is not None and ev.step == self.total - 1
+        if self.every and (ev.step % self.every == 0 or last):
+            self.log(f"step {ev.step:5d} loss {float(ev.loss):.4f} "
+                     f"acc {float(ev.metrics['accuracy']):.3f} "
+                     f"lr {float(ev.hparams['lr']):.2e} "
+                     f"({ev.dt*1e3:.0f} ms)")
+
+    def on_eval(self, ctx, step: int, metrics: dict) -> None:
+        self.log(f"  eval loss {metrics['loss']:.4f} "
+                 f"ppl {metrics['ppl']:.2f} acc {metrics['accuracy']:.3f}")
+
+
+class EvalHook(Hook):
+    """Runs held-out eval every ``every`` steps and broadcasts the result
+    to the whole pipeline via ``ctx.dispatch_eval``.
+
+    Two stream modes: a plain ``eval_iter`` (caller-owned; cannot be
+    rewound across resume/recovery), or an ``iter_factory(start_batch)``
+    — the default pipeline's mode — which makes the eval stream a pure
+    function of how many evals the run has completed, so a resumed or
+    fault-recovered run consumes exactly the batches the uninterrupted
+    run would have."""
+
+    def __init__(self, eval_iter=None, every: int = 0, n_batches: int = 4,
+                 *, iter_factory=None):
+        assert (eval_iter is None) != (iter_factory is None), \
+            "pass exactly one of eval_iter / iter_factory"
+        self.eval_iter = eval_iter
+        self.iter_factory = iter_factory
+        self.every = every
+        self.n_batches = n_batches
+
+    def _rewind(self, step: int) -> None:
+        if self.iter_factory is None or not self.every:
+            return
+        consumed = (step // self.every) * self.n_batches
+        self.eval_iter = self.iter_factory(consumed)
+
+    def on_run_start(self, ctx) -> None:
+        self._rewind(ctx.start_step)
+
+    def on_recover(self, ctx, restored_step: int) -> None:
+        self._rewind(restored_step)
+
+    def evaluate(self, ctx) -> dict:
+        import jax
+        import jax.numpy as jnp
+        loss_fn = ctx.program.loss_fn
+        tot, acc = 0.0, 0.0
+        for _ in range(self.n_batches):
+            batch = jax.tree.map(jnp.asarray, next(self.eval_iter))
+            loss, metrics = loss_fn(ctx.params, batch)
+            tot += float(loss)
+            acc += float(metrics["accuracy"])
+        tot /= self.n_batches
+        return {"loss": tot, "ppl": float(jnp.exp(tot)),
+                "accuracy": acc / self.n_batches}
+
+    def on_step_end(self, ctx, ev: StepEvent) -> None:
+        if self.every and (ev.step + 1) % self.every == 0:
+            ctx.dispatch_eval(ev.step, self.evaluate(ctx))
+
+
+class CheckpointHook(Hook):
+    """Async checkpoint save every ``every`` steps; drains on exit.  The
+    saved tree is ``(params, opt_state)`` with the data step recorded so
+    resume is exactly deterministic."""
+
+    def __init__(self, manager, every: int):
+        self.manager = manager
+        self.every = every
+
+    def on_step_end(self, ctx, ev: StepEvent) -> None:
+        if self.every and (ev.step + 1) % self.every == 0:
+            self.manager.save(ev.step + 1, (ctx.params, ctx.opt_state),
+                              extra={"data_step": ev.step + 1})
+
+    def on_exit(self, ctx) -> None:
+        self.manager.wait()
+
+
+class HeartbeatHook(Hook):
+    """Watchdog: marks the run wedged if steps stop completing."""
+
+    def __init__(self, timeout_s: float,
+                 on_stall: Optional[Callable[[], None]] = None):
+        self.timeout_s = timeout_s
+        self._on_stall = on_stall
+        self.heartbeat: Optional[Heartbeat] = None
+
+    def on_run_start(self, ctx) -> None:
+        on_stall = self._on_stall or (lambda: ctx.log("HEARTBEAT STALL"))
+        self.heartbeat = Heartbeat(self.timeout_s, on_stall=on_stall)
+        self.heartbeat.start()
+
+    def on_step_end(self, ctx, ev: StepEvent) -> None:
+        if self.heartbeat is not None:
+            self.heartbeat.beat()
+
+    def on_exit(self, ctx) -> None:
+        if self.heartbeat is not None:
+            self.heartbeat.stop()
+
+
+class StragglerHook(Hook):
+    """Feeds per-step wall time into a :class:`StragglerMonitor` (EMA
+    outlier detection; the coordinator's evict signal at scale)."""
+
+    def __init__(self, monitor: Optional[StragglerMonitor] = None):
+        self.monitor = monitor if monitor is not None else StragglerMonitor()
+
+    def on_step_end(self, ctx, ev: StepEvent) -> None:
+        self.monitor.observe(ev.step, ev.dt)
+
+
+class TimingHook(Hook):
+    """Wall-clock accounting: total run seconds and mean us/step."""
+
+    def __init__(self):
+        self.t0 = None
+        self.wall_s = 0.0
+        self.n_steps = 0
+
+    def on_run_start(self, ctx) -> None:
+        self.t0 = time.time()
+
+    def on_step_end(self, ctx, ev: StepEvent) -> None:
+        self.n_steps += 1
+
+    def on_exit(self, ctx) -> None:
+        if self.t0 is not None:
+            self.wall_s = time.time() - self.t0
+
+    @property
+    def us_per_step(self) -> float:
+        return self.wall_s / max(self.n_steps, 1) * 1e6

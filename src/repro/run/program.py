@@ -1,0 +1,204 @@
+"""StepProgram — the one train-step builder for every scenario.
+
+``build_step_program(spec, arch, opt)`` owns the full step-construction
+matrix that used to be inlined in ``Trainer._build_step`` and re-derived
+by every launcher/benchmark:
+
+  * **fused × unfused** — LOMO/AdaLomo's update-in-the-backward-scan vs
+    the ``jax.value_and_grad`` + ``Opt.step`` baseline path;
+  * **microbatching** — the fused path does LOMO-style *sequential
+    per-microbatch updates* under ``lax.scan`` (classic accumulation would
+    materialize the full gradient pytree — exactly what LOMO avoids); the
+    unfused path accumulates gradients and applies one update;
+  * **sharding constraints** — residual/grad/param constraints (ZeRO-style)
+    are threaded into ``arch.make_fused_train_step`` so multi-device
+    dry-runs lower the *same* program single-process training runs.
+
+The resulting :class:`StepProgram` carries the pure callable (``fn``), the
+jitted step with (params, opt_state) donation (``step``), the hparam
+schedule (``hparams_fn`` — call-time data, zero recompiles, Opt-v2
+contract), and the abstract ``ShapeDtypeStruct`` signature
+(``abstract_args``) so ``launch/dryrun.py`` lowers exactly what
+``launch/train.py`` would execute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import optimizers as opt_lib
+from repro.core.api import Opt, no_decay_1d
+from repro.run.spec import RunSpec
+from repro.train.schedules import constant, warmup_cosine
+
+
+def _split_microbatches(batch, k: int):
+    """[k*b, ...] -> [k, b, ...] per leaf, with a clear divisibility error."""
+
+    def split(x):
+        if x.shape[0] % k:
+            raise ValueError(
+                f"batch dim {x.shape[0]} not divisible by microbatches={k}")
+        return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+@dataclasses.dataclass
+class StepProgram:
+    """One compiled training step + everything needed to drive or lower it.
+
+    ``fn(params, opt_state, batch, hparams)`` is the pure callable —
+    re-jittable under explicit shardings (dry-run); ``step`` is the same
+    callable jitted with ``donate_argnums=(0, 1)`` (in-place buffer reuse,
+    the low-memory contract).  ``hparams_fn(step)`` returns the dynamic
+    hparams pytree for the 1-based step — identical dict structure every
+    step, so the jitted step never recompiles under schedules.
+    """
+
+    spec: RunSpec
+    arch: Any
+    opt: Opt
+    fused: bool
+    fn: Callable
+    step: Any
+    hparams_fn: Callable[[int], dict]
+    _loss_fn: Any = None
+
+    # ---------------- drive ----------------
+    def init(self, seed: int = 0):
+        params = self.arch.init_params(jax.random.PRNGKey(seed))
+        return params, self.opt.init(params)
+
+    @property
+    def loss_fn(self):
+        """Jitted eval loss fn (lazy; shared by EvalHook / Trainer)."""
+        if self._loss_fn is None:
+            self._loss_fn = jax.jit(self.arch.make_loss_fn())
+        return self._loss_fn
+
+    # ---------------- introspection ----------------
+    def abstract_args(self) -> tuple:
+        """(params, opt_state, batch, hparams) as ShapeDtypeStruct pytrees —
+        the jit signature, derived from the spec with zero allocation.
+        This is what makes dry-run lower the identical program it would
+        train."""
+        if self.spec.data is None:
+            raise ValueError("abstract_args requires spec.data")
+        params_sds = jax.eval_shape(
+            lambda: self.arch.init_params(jax.random.PRNGKey(0)))
+        opt_sds = jax.eval_shape(self.opt.init, params_sds)
+        d = self.spec.data
+        batch_sds = self.arch.train_batch_specs(d.global_batch, d.seq_len)
+        hp_sds = jax.tree.map(
+            lambda _: jax.ShapeDtypeStruct((), jnp.float32),
+            self.hparams_fn(1))
+        return params_sds, opt_sds, batch_sds, hp_sds
+
+    def lower(self):
+        """Lower the donated jitted step on the abstract signature."""
+        return self.step.lower(*self.abstract_args())
+
+    def cache_size(self) -> int:
+        """Jit cache entries for the step — 1 after any number of steps is
+        the zero-steady-state-recompile guarantee."""
+        return self.step._cache_size()
+
+
+def build_step_program(spec: RunSpec, arch=None, opt: Optional[Opt] = None,
+                       *, groups=None, residual_constraint=None,
+                       grad_constraint=None, param_constraint=None,
+                       global_grad_norm=None, donate: bool = True
+                       ) -> StepProgram:
+    """Assemble the :class:`StepProgram` for ``spec``.
+
+    ``arch`` defaults to the registry lookup of ``spec.model``; pass an
+    explicit :class:`~repro.models.registry.Arch` for ad-hoc configs
+    (benchmarks' tiny proxies).  ``groups=None`` applies the paper-standard
+    no-decay-on-1-D grouping when the rule has a ``weight_decay`` hparam.
+    The sharding-constraint kwargs mirror ``arch.make_fused_train_step``
+    (fused path only) so dry-run cells build through this same function.
+    """
+    if arch is None:
+        from repro.models.registry import get_arch
+        arch = get_arch(spec.model.arch, smoke=spec.model.smoke)
+    if opt is None:
+        rule = opt_lib.get_rule(spec.opt.name, **spec.opt.kwargs)
+        if groups is None:
+            groups = ((no_decay_1d(),)
+                      if "weight_decay" in rule.hparams else ())
+        opt = Opt(rule, groups=groups)
+
+    fused = spec.steps.resolved_fused(spec.opt.name)
+    k = spec.steps.microbatches
+    base_lr = spec.opt.resolved_lr()
+    lr_fn = (warmup_cosine(base_lr, spec.steps.total, spec.opt.warmup_frac)
+             if spec.opt.schedule == "cosine" else constant(base_lr))
+    extras = dict(spec.opt.hparams)
+
+    def hparams_fn(step: int) -> dict:
+        """Dynamic hparams for the 1-based ``step``: scheduled lr + spec
+        extras.  The schedule is authoritative for lr."""
+        return {**extras, "lr": lr_fn(step)}
+
+    if fused:
+        step_kw = arch.make_fused_train_step(
+            opt, residual_constraint=residual_constraint,
+            global_grad_norm=global_grad_norm,
+            grad_constraint=grad_constraint,
+            param_constraint=param_constraint)
+
+        def one_step(params, opt_state, batch, hp):
+            return step_kw(params, opt_state, batch, hparams=hp)
+
+        if k > 1:
+            inner = one_step
+
+            def one_step(params, opt_state, batch, hp):  # noqa: F811
+                # LOMO-style: sequential updates per microbatch.
+                mb = _split_microbatches(batch, k)
+
+                def body(carry, b):
+                    p, s = carry
+                    p, s, loss, metrics = inner(p, s, b, hp)
+                    return (p, s), (loss, metrics)
+
+                (params, opt_state), (losses, metrics) = jax.lax.scan(
+                    body, (params, opt_state), mb)
+                return (params, opt_state, losses.mean(),
+                        jax.tree.map(lambda m: m.mean(), metrics))
+    else:
+        if (residual_constraint is not None or grad_constraint is not None
+                or param_constraint is not None
+                or global_grad_norm is not None):
+            raise ValueError("sharding constraints / global_grad_norm "
+                             "require the fused path")
+        loss_fn = arch.make_loss_fn()
+
+        def one_step(params, opt_state, batch, hp):
+            if k > 1:
+                mb = _split_microbatches(batch, k)
+
+                def body(g_acc, b):
+                    (loss, metrics), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, b)
+                    return jax.tree.map(jnp.add, g_acc, g), (loss, metrics)
+
+                g0 = jax.tree.map(jnp.zeros_like, params)
+                grads, (losses, metrics) = jax.lax.scan(body, g0, mb)
+                grads = jax.tree.map(lambda g: g / k, grads)
+                loss = losses.mean()
+                metrics = jax.tree.map(lambda m: m.mean(), metrics)
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            params2, opt2 = opt.step(params, grads, opt_state, hp)
+            return params2, opt2, loss, metrics
+
+    jitted = (jax.jit(one_step, donate_argnums=(0, 1)) if donate
+              else jax.jit(one_step))
+    return StepProgram(spec=spec, arch=arch, opt=opt, fused=fused,
+                       fn=one_step, step=jitted, hparams_fn=hparams_fn)

@@ -1,0 +1,249 @@
+"""``run(spec)`` — the one entrypoint for train / dryrun / benchmarks.
+
+Assembles arch + :class:`~repro.run.program.StepProgram` + data + hook
+pipeline from a :class:`~repro.run.spec.RunSpec` and drives the loop.
+Every knob has a programmatic override (prebuilt program, warm-start
+params, injected iterators, extra hooks) so benchmarks and tests compose
+scenarios without re-wiring the loop — the spec stays the single source
+of truth for what is *declarable*, the overrides carry what is not.
+
+Default hook order (measurement before side effects; see
+``repro.run.hooks``): straggler → heartbeat → history → logging → eval →
+checkpoint → user hooks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator, Optional, Sequence, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.run import hooks as hooks_lib
+from repro.run.data import EVAL_SEED_OFFSET, make_batch_iter
+from repro.run.program import StepProgram, build_step_program
+from repro.run.spec import RunSpec
+
+
+def _retriable_errors() -> tuple:
+    """Transient device-side failures worth a checkpoint-restore retry
+    (preempted TPU, ICI link flap)."""
+    try:
+        from jax.errors import JaxRuntimeError  # jax >= 0.4.14
+        return (JaxRuntimeError,)
+    except ImportError:  # pragma: no cover
+        return (RuntimeError,)
+
+
+@dataclasses.dataclass
+class RunContext:
+    """What hooks see: the spec, the program, the live (params, opt_state)
+    after the most recent step, and the dispatch surface."""
+
+    spec: RunSpec
+    program: StepProgram
+    params: Any
+    opt_state: Any
+    log: Callable[[str], None]
+    hooks: tuple
+    ckpt_manager: Any = None
+    start_step: int = 0
+
+    def dispatch_eval(self, step: int, metrics: dict) -> None:
+        for h in self.hooks:
+            h.on_eval(self, step, metrics)
+
+
+@dataclasses.dataclass
+class RunResult:
+    params: Any
+    opt_state: Any
+    history: dict
+    start_step: int
+    program: StepProgram
+    hooks: tuple
+
+    def find_hook(self, cls: Type) -> Optional[hooks_lib.Hook]:
+        for h in self.hooks:
+            if isinstance(h, cls):
+                return h
+        return None
+
+
+def _default_hooks(spec: RunSpec, *, eval_iter, eval_factory, ckpt_manager,
+                   log_fn, user_hooks) -> tuple:
+    """The standard pipeline; a user hook of the same class replaces the
+    default instance (so e.g. a caller-owned StragglerMonitor keeps
+    accumulating across runs)."""
+    user = tuple(user_hooks)
+
+    def absent(cls):
+        return not any(isinstance(h, cls) for h in user)
+
+    out = []
+    if absent(hooks_lib.StragglerHook):
+        out.append(hooks_lib.StragglerHook())
+    if spec.fault.heartbeat_timeout_s > 0 and absent(hooks_lib.HeartbeatHook):
+        out.append(hooks_lib.HeartbeatHook(spec.fault.heartbeat_timeout_s))
+    if absent(hooks_lib.HistoryHook):
+        out.append(hooks_lib.HistoryHook())
+    if spec.log_every and absent(hooks_lib.LoggingHook):
+        out.append(hooks_lib.LoggingHook(spec.log_every, log_fn,
+                                         total=spec.steps.total))
+    if spec.eval.every and absent(hooks_lib.EvalHook):
+        if eval_iter is not None:
+            out.append(hooks_lib.EvalHook(eval_iter, spec.eval.every,
+                                          spec.eval.n_batches))
+        elif eval_factory is not None:
+            out.append(hooks_lib.EvalHook(every=spec.eval.every,
+                                          n_batches=spec.eval.n_batches,
+                                          iter_factory=eval_factory))
+    if (ckpt_manager is not None and spec.checkpoint.every
+            and absent(hooks_lib.CheckpointHook)):
+        out.append(hooks_lib.CheckpointHook(ckpt_manager,
+                                            spec.checkpoint.every))
+    return tuple(out) + user
+
+
+def run(spec: RunSpec, *, arch=None, program: Optional[StepProgram] = None,
+        hooks: Sequence[hooks_lib.Hook] = (), params=None, opt_state=None,
+        batch_iter: Optional[Iterator[dict]] = None, eval_iter=None,
+        ckpt_manager=None, start_step: int = 0, groups=None,
+        log_fn: Callable[[str], None] = print) -> RunResult:
+    """Drive one run end-to-end.  Overrides (all optional):
+
+    ``arch``       an Arch instance for ad-hoc configs (else registry);
+    ``program``    a prebuilt StepProgram (else ``build_step_program``);
+    ``params`` / ``opt_state``  warm starts (opt_state defaults to a fresh
+                   ``opt.init(params)``);
+    ``batch_iter`` / ``eval_iter``  injected data streams (else built from
+                   ``spec.data``, eval stream seed-offset);
+    ``ckpt_manager``  a CheckpointManager (else built from
+                   ``spec.checkpoint.dir``); resume restores the latest
+                   complete step and fast-forwards the data stream;
+    ``hooks``      appended after the default pipeline (same-class user
+                   hooks replace the default instance);
+    ``start_step`` begin mid-schedule without a checkpoint.
+    """
+    if program is None:
+        program = build_step_program(spec, arch, groups=groups)
+    arch = program.arch
+
+    if params is None:
+        params, opt_state = program.init(spec.seed)
+    elif opt_state is None:
+        opt_state = program.opt.init(params)
+
+    if spec.mesh.kind != "none":
+        # Mesh execution inside run() is the elastic-restore follow-up
+        # (ROADMAP); dryrun consumes MeshSpec itself.  Say so rather than
+        # silently dropping a declared sharding mode on spec replay.
+        log_fn(f"note: spec.mesh.kind={spec.mesh.kind!r} is recorded but "
+               "run() executes single-process; use launch/dryrun.py for "
+               "mesh lowering")
+
+    ck = spec.checkpoint
+    if ckpt_manager is None and ck.dir:
+        from repro.checkpoint.manager import CheckpointManager
+        ckpt_manager = CheckpointManager(ck.dir, keep_last=ck.keep_last,
+                                         gc_incomplete=ck.gc_incomplete)
+    if (ckpt_manager is not None and ck.resume
+            and ckpt_manager.latest_step() is not None):
+        start_step, (params, opt_state), _extra = ckpt_manager.restore(
+            template=(params, opt_state))
+        log_fn(f"resumed from step {start_step}")
+
+    own_batch_iter = batch_iter is None
+    if batch_iter is None:
+        batch_iter = make_batch_iter(spec, arch, start_step)
+    eval_factory = None
+    if eval_iter is None and spec.eval.every and spec.data is not None:
+        # The default held-out stream is a pure function of how many eval
+        # batches the run has consumed, so EvalHook can fast-forward on
+        # resume and rewind on fault recovery (deterministic eval curve).
+        def eval_factory(start_batch, _spec=spec, _arch=arch):
+            return make_batch_iter(_spec, _arch, start_batch,
+                                   seed_offset=EVAL_SEED_OFFSET)
+
+    pipeline = _default_hooks(spec, eval_iter=eval_iter,
+                              eval_factory=eval_factory,
+                              ckpt_manager=ckpt_manager, log_fn=log_fn,
+                              user_hooks=hooks)
+    ctx = RunContext(spec=spec, program=program, params=params,
+                     opt_state=opt_state, log=log_fn, hooks=pipeline,
+                     ckpt_manager=ckpt_manager, start_step=start_step)
+
+    # Transient-failure policy: the jitted step donates (params, opt_state),
+    # so a failed call may have consumed its input buffers — re-invoking
+    # with the same arguments can never succeed (the flaw in the old
+    # Trainer's blind retry).  Recovery therefore goes through the
+    # checkpoint: restore the latest complete step, rewind the (stateless,
+    # step-keyed) data stream, and resume the loop from there.  Without a
+    # checkpoint — or with a caller-injected batch iterator we cannot
+    # rewind — the error propagates immediately.  Hooks re-observe the
+    # re-executed steps, so the history is the truthful training record.
+    retriable = _retriable_errors()
+    failures = 0
+    try:
+        # on_run_start inside the try: if a hook raises here, earlier
+        # hooks that already started (watchdog threads, async writers)
+        # still get their on_exit.
+        for h in pipeline:
+            h.on_run_start(ctx)
+        t_last = time.time()
+        step = start_step
+        while step < spec.steps.total:
+            batch = jax.tree.map(jnp.asarray, next(batch_iter))
+            hp = program.hparams_fn(step + 1)
+            try:
+                ctx.params, ctx.opt_state, loss, metrics = program.step(
+                    ctx.params, ctx.opt_state, batch, hp)
+            except retriable as e:
+                failures += 1
+                if ckpt_manager is not None:
+                    ckpt_manager.wait()  # drain any in-flight async save
+                # Every stream must rewind for recovery to reproduce the
+                # uninterrupted run: caller-injected train or eval
+                # iterators cannot, so the error propagates instead of
+                # silently diverging the curves.
+                rewindable_eval = all(
+                    h.iter_factory is not None for h in pipeline
+                    if isinstance(h, hooks_lib.EvalHook) and h.every)
+                recoverable = (failures <= spec.fault.retries
+                               and own_batch_iter and rewindable_eval
+                               and ckpt_manager is not None
+                               and ckpt_manager.latest_step() is not None)
+                if not recoverable:
+                    raise
+                restored, (p, s), _ = ckpt_manager.restore(
+                    template=(ctx.params, ctx.opt_state))
+                log_fn(f"step {step} failed ({type(e).__name__}); "
+                       f"restored step {restored} "
+                       f"(attempt {failures}/{spec.fault.retries})")
+                ctx.params, ctx.opt_state = p, s
+                step = restored
+                batch_iter = make_batch_iter(spec, arch, restored)
+                for h in pipeline:
+                    h.on_recover(ctx, restored)
+                t_last = time.time()
+                continue
+            now = time.time()
+            ev = hooks_lib.StepEvent(step=step, loss=loss, metrics=metrics,
+                                     hparams=hp, dt=now - t_last)
+            t_last = now
+            for h in pipeline:
+                h.on_step_end(ctx, ev)
+            step += 1
+    finally:
+        for h in pipeline:
+            h.on_exit(ctx)
+
+    hist = None
+    for h in pipeline:
+        if isinstance(h, hooks_lib.HistoryHook):
+            hist = h.history
+            break
+    return RunResult(params=ctx.params, opt_state=ctx.opt_state,
+                     history=hist if hist is not None else {},
+                     start_step=start_step, program=program, hooks=pipeline)

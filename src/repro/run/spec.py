@@ -1,0 +1,272 @@
+"""RunSpec — the declarative, serializable description of one run.
+
+A :class:`RunSpec` is everything the run layer needs to reconstruct a
+training (or dry-run) scenario: which architecture at which shape, the
+data configuration, the Opt-v2 optimizer (rule name + static factory
+kwargs + dynamic hparams + schedule), mesh/sharding mode, microbatching,
+and the checkpoint / eval / fault policies.  It is plain data — nested
+frozen dataclasses of JSON-scalar fields — so a spec round-trips through
+``to_json`` / ``from_json`` losslessly and can be logged next to every
+artifact.  ``launch/train.py`` is just ``RunSpec.from_cli()`` + ``run()``;
+``launch/dryrun.py`` lowers the *same* :class:`~repro.run.program.
+StepProgram` a spec would train.
+
+Two things are deliberately *not* in the spec:
+
+* **Param groups.**  ``GroupSpec`` predicates are Python callables and
+  can't serialize; ``build_step_program(spec, groups=...)`` takes them as
+  a Python-level argument.  The default (``None``) is the paper-standard
+  no-decay-on-1-D grouping whenever the rule has a ``weight_decay``
+  hparam.
+* **Live objects** (archs, iterators, hooks).  ``run()`` accepts those as
+  overrides for programmatic callers (benchmarks warm-starting params,
+  tests injecting batch iterators); the spec stays declarative.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Mapping, Optional
+
+from repro.data.pipeline import DataConfig
+
+# Paper hyper-parameters (Table 6/7): AdaLomo lr ≈ 5e-4 (IT) / 1e-3
+# (pretrain); AdamW 1e-5..2e-5; LOMO/SGD 1e-2.
+DEFAULT_LRS = {"adalomo": 5e-4, "adafactor": 5e-4, "adamw": 2e-5,
+               "lomo": 1e-2, "sgd": 1e-2, "sgd_momentum": 1e-2,
+               "sgd_variance": 5e-4}
+
+# Optimizers whose update is fused into the backward scan by default
+# (LOMO-mechanism rules); the baselines default to the unfused path.
+FUSED_BY_DEFAULT = ("adalomo", "lomo", "sgd")
+
+SCHEDULES = ("cosine", "constant")
+MESH_KINDS = ("none", "single", "multi")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Which architecture, at which scale."""
+
+    arch: str                      # registry id (or a label for ad-hoc archs)
+    smoke: bool = False            # reduced CPU-sized config
+
+
+@dataclasses.dataclass(frozen=True)
+class OptSpec:
+    """Opt-v2 optimizer: rule + schedule + dynamic hparams.
+
+    ``kwargs`` are *static* rule-factory kwargs (``backend=``, ``cfg=``...);
+    ``hparams`` are extra *dynamic* hyperparameters merged into the
+    per-step hparams dict (schedulable without recompiles).  ``lr=None``
+    picks the paper default for the rule (:data:`DEFAULT_LRS`).
+    """
+
+    name: str = "adalomo"
+    lr: Optional[float] = None
+    schedule: str = "cosine"
+    warmup_frac: float = 0.03
+    kwargs: dict = dataclasses.field(default_factory=dict)
+    hparams: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"schedule {self.schedule!r} not in {SCHEDULES}")
+
+    def resolved_lr(self) -> float:
+        if self.lr is not None:
+            return self.lr
+        return DEFAULT_LRS.get(self.name, 1e-3)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSpec:
+    """The step program's shape: length, fusion, microbatching.
+
+    ``fused=None`` resolves by rule family (:data:`FUSED_BY_DEFAULT`).
+    ``microbatches=k`` splits the global batch into k sequential
+    microbatches inside one jitted step: the fused path does LOMO-style
+    sequential per-microbatch *updates*; the unfused path accumulates
+    gradients (see ``build_step_program``).
+    """
+
+    total: int = 100
+    microbatches: int = 1
+    fused: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.microbatches < 1:
+            raise ValueError(f"microbatches must be >= 1, "
+                             f"got {self.microbatches}")
+
+    def resolved_fused(self, opt_name: str) -> bool:
+        if self.fused is not None:
+            return self.fused
+        return opt_name in FUSED_BY_DEFAULT
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Mesh + sharding mode (consumed by dry-run / multi-device paths).
+
+    ``optimized=False`` is the paper-faithful baseline: no activation
+    sharding policy, no gradient reduce-scatter constraint.
+    """
+
+    kind: str = "none"             # "none" | "single" | "multi"
+    optimized: bool = True
+
+    def __post_init__(self):
+        if self.kind not in MESH_KINDS:
+            raise ValueError(f"mesh kind {self.kind!r} not in {MESH_KINDS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointSpec:
+    dir: Optional[str] = None
+    every: int = 0                 # 0 = disabled
+    resume: bool = False
+    keep_last: int = 3
+    gc_incomplete: bool = False    # GC crash-orphaned partial step dirs
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalSpec:
+    every: int = 0                 # 0 = disabled
+    n_batches: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    heartbeat_timeout_s: float = 0.0   # 0 = disabled
+    # Max transient-failure recoveries per run: each restores the latest
+    # complete checkpoint and rewinds the data stream (donated step
+    # buffers make blind re-invocation impossible — see run()).
+    retries: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """One run, declaratively.  See module docstring."""
+
+    model: ModelSpec
+    data: Optional[DataConfig] = None
+    opt: OptSpec = dataclasses.field(default_factory=OptSpec)
+    steps: StepSpec = dataclasses.field(default_factory=StepSpec)
+    mesh: MeshSpec = dataclasses.field(default_factory=MeshSpec)
+    checkpoint: CheckpointSpec = dataclasses.field(
+        default_factory=CheckpointSpec)
+    eval: EvalSpec = dataclasses.field(default_factory=EvalSpec)
+    fault: FaultSpec = dataclasses.field(default_factory=FaultSpec)
+    log_every: int = 10
+    seed: int = 0
+
+    def __post_init__(self):
+        if (self.data is not None and self.steps.microbatches > 1
+                and self.data.global_batch % self.steps.microbatches):
+            raise ValueError(
+                f"global_batch={self.data.global_batch} not divisible by "
+                f"microbatches={self.steps.microbatches}")
+
+    # ---------------- serialization ----------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "RunSpec":
+        d = dict(d)
+
+        def sub(key, klass):
+            if d.get(key) is not None:
+                d[key] = klass(**d[key])
+
+        sub("model", ModelSpec)
+        sub("data", DataConfig)
+        sub("opt", OptSpec)
+        sub("steps", StepSpec)
+        sub("mesh", MeshSpec)
+        sub("checkpoint", CheckpointSpec)
+        sub("eval", EvalSpec)
+        sub("fault", FaultSpec)
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, text: str) -> "RunSpec":
+        return cls.from_dict(json.loads(text))
+
+    # ---------------- CLI ----------------
+    @classmethod
+    def from_cli(cls, argv=None) -> "RunSpec":
+        import argparse
+        ap = argparse.ArgumentParser()
+        add_cli_args(ap)
+        return from_cli_args(ap.parse_args(argv))
+
+
+def add_cli_args(ap) -> None:
+    """Install the RunSpec flag set on an argparse parser (shared by
+    ``launch/train.py``; kept here so the CLI surface and the spec can't
+    drift)."""
+    ap.add_argument("--arch", default=None,
+                    help="architecture registry id (required unless --spec)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--optimizer", default="adalomo")
+    ap.add_argument("--lr", type=float, default=None,
+                    help="base lr (default: paper value for the optimizer)")
+    ap.add_argument("--schedule", default="cosine", choices=SCHEDULES)
+    ap.add_argument("--weight-decay", type=float, default=None,
+                    help="decoupled weight decay (Opt v2 dynamic hparam; "
+                         "1-D params are auto-grouped to no-decay)")
+    ap.add_argument("--opt-backend", default=None,
+                    choices=["auto", "jnp", "pallas"],
+                    help="AdaLomo update backend (Pallas kernel on TPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--unfused", action="store_true")
+    ap.add_argument("--source", default="synthetic",
+                    choices=["synthetic", "memmap"])
+    ap.add_argument("--data-path", default=None,
+                    help="packed .bin token file (--source memmap)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--gc-incomplete", action="store_true",
+                    help="GC crash-orphaned partial checkpoint dirs at start")
+    ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--heartbeat-timeout", type=float, default=0.0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+
+
+def from_cli_args(args) -> RunSpec:
+    """Build a RunSpec from parsed :func:`add_cli_args` flags."""
+    if not args.arch:
+        raise SystemExit("--arch is required (or pass --spec <file.json>)")
+    hparams = ({} if args.weight_decay is None
+               else {"weight_decay": args.weight_decay})
+    kwargs = ({} if args.opt_backend is None
+              else {"backend": args.opt_backend})
+    return RunSpec(
+        model=ModelSpec(arch=args.arch, smoke=args.smoke),
+        # vocab=0 → resolved from the arch config by run()
+        data=DataConfig(vocab=0, seq_len=args.seq, global_batch=args.batch,
+                        seed=args.seed, source=args.source,
+                        path=args.data_path),
+        opt=OptSpec(name=args.optimizer, lr=args.lr, schedule=args.schedule,
+                    kwargs=kwargs, hparams=hparams),
+        steps=StepSpec(total=args.steps, microbatches=args.microbatches,
+                       fused=(False if args.unfused else None)),
+        checkpoint=CheckpointSpec(dir=args.ckpt_dir, every=args.ckpt_every,
+                                  resume=args.resume,
+                                  gc_incomplete=args.gc_incomplete),
+        eval=EvalSpec(every=args.eval_every),
+        fault=FaultSpec(heartbeat_timeout_s=args.heartbeat_timeout),
+        log_every=args.log_every,
+        seed=args.seed)

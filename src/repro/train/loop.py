@@ -1,25 +1,25 @@
-"""Training loop: fused (LOMO/AdaLomo) or unfused (AdamW/Adafactor) steps,
-LOMO-style microbatching, eval, checkpoint/resume, fault hooks.
+"""Legacy Trainer — now a thin compatibility shim over the Run API.
 
-Microbatching note (DESIGN.md): classic gradient accumulation materializes
-the full gradient pytree — exactly what LOMO exists to avoid.  The fused
-path therefore does *sequential per-microbatch updates* (the paper trains
-with per-device batches small enough to fit, scaled out with ZeRO-3); the
-unfused path supports standard accumulation for the baselines.
+The loop-construction logic that used to live here (fused/unfused ×
+microbatch-scan matrix, eval, checkpoint cadence, heartbeat/straggler
+wiring) moved to ``repro.run``: ``build_step_program`` owns the step
+matrix, the hook pipeline owns the policies, and ``run()`` drives the
+loop.  ``Trainer``/``TrainConfig`` remain for existing call sites and
+map 1:1 onto a :class:`~repro.run.spec.RunSpec` (see DESIGN.md
+§"Run API v1" for the migration table); new code should build a RunSpec
+directly.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import optimizers as opt_lib
-from repro.core.api import Opt, no_decay_1d
-from repro.train.fault import Heartbeat, StragglerMonitor, retrying
-from repro.train.schedules import constant, warmup_cosine
+from repro.run.hooks import EvalHook, StragglerHook
+from repro.run.program import build_step_program
+from repro.run.runner import run
+from repro.run.spec import (CheckpointSpec, EvalSpec, FaultSpec, ModelSpec,
+                            OptSpec, RunSpec, StepSpec)
+from repro.train.fault import StragglerMonitor
 
 
 @dataclasses.dataclass
@@ -47,9 +47,28 @@ class TrainConfig:
     # weight_decay hparam, where wd=0 makes it a no-op).
     groups: Optional[tuple] = None
 
+    def to_run_spec(self, arch) -> RunSpec:
+        """The equivalent RunSpec (data supplied at fit time via
+        iterators, so ``spec.data`` stays None)."""
+        return RunSpec(
+            model=ModelSpec(arch=arch.arch_id),
+            data=None,
+            opt=OptSpec(name=self.optimizer, lr=self.lr,
+                        schedule=self.schedule,
+                        warmup_frac=self.warmup_frac,
+                        kwargs=self.opt_kwargs, hparams=self.hparams),
+            steps=StepSpec(total=self.total_steps,
+                           microbatches=self.microbatches,
+                           fused=self.fused),
+            checkpoint=CheckpointSpec(dir=self.ckpt_dir,
+                                      every=self.ckpt_every),
+            eval=EvalSpec(every=self.eval_every),
+            fault=FaultSpec(heartbeat_timeout_s=self.heartbeat_timeout_s),
+            log_every=self.log_every)
+
 
 class Trainer:
-    """Drives one arch (from the registry) through training."""
+    """Compat shim: ``Trainer(arch, tcfg).fit(...)`` ≡ ``run(spec, ...)``."""
 
     def __init__(self, arch, tcfg: TrainConfig, *, mesh=None,
                  log_fn: Callable[[str], None] = print):
@@ -57,156 +76,46 @@ class Trainer:
         self.tcfg = tcfg
         self.mesh = mesh
         self.log = log_fn
-        rule = opt_lib.get_rule(tcfg.optimizer, **tcfg.opt_kwargs)
-        groups = tcfg.groups
-        if groups is None:
-            groups = ((no_decay_1d(),)
-                      if "weight_decay" in rule.hparams else ())
-        self.opt = Opt(rule, groups=groups)
-        self.lr_fn = (warmup_cosine(tcfg.lr, tcfg.total_steps,
-                                    tcfg.warmup_frac)
-                      if tcfg.schedule == "cosine" else constant(tcfg.lr))
+        self.spec = tcfg.to_run_spec(arch)
+        self._program = build_step_program(self.spec, arch,
+                                           groups=tcfg.groups)
+        self.opt = self._program.opt
         self.straggler = StragglerMonitor()
-        self._build_step()
 
-    # ------------------------------------------------------------------
-    def _build_step(self):
-        tcfg = self.tcfg
-        if tcfg.fused:
-            step_fn = self.arch.make_fused_train_step(self.opt)
-
-            def one_step(params, opt_state, batch, hp):
-                return step_fn(params, opt_state, batch, hparams=hp)
-
-            if tcfg.microbatches > 1:
-                inner = one_step
-
-                def one_step(params, opt_state, batch, hp):  # noqa: F811
-                    # LOMO-style: sequential updates per microbatch.
-                    mb = jax.tree.map(
-                        lambda x: x.reshape((tcfg.microbatches,
-                                             x.shape[0] // tcfg.microbatches)
-                                            + x.shape[1:]), batch)
-
-                    def body(carry, b):
-                        p, s = carry
-                        p, s, loss, metrics = inner(p, s, b, hp)
-                        return (p, s), (loss, metrics)
-
-                    (params, opt_state), (losses, metrics) = jax.lax.scan(
-                        body, (params, opt_state), mb)
-                    return (params, opt_state, losses.mean(),
-                            jax.tree.map(lambda m: m.mean(), metrics))
-
-            self._step = jax.jit(one_step, donate_argnums=(0, 1))
-        else:
-            loss_fn = self.arch.make_loss_fn()
-
-            def one_step(params, opt_state, batch, hp):
-                if tcfg.microbatches > 1:
-                    mb = jax.tree.map(
-                        lambda x: x.reshape((tcfg.microbatches,
-                                             x.shape[0] // tcfg.microbatches)
-                                            + x.shape[1:]), batch)
-
-                    def body(g_acc, b):
-                        (loss, metrics), g = jax.value_and_grad(
-                            loss_fn, has_aux=True)(params, b)
-                        return jax.tree.map(jnp.add, g_acc, g), (loss, metrics)
-
-                    g0 = jax.tree.map(jnp.zeros_like, params)
-                    grads, (losses, metrics) = jax.lax.scan(body, g0, mb)
-                    grads = jax.tree.map(
-                        lambda g: g / tcfg.microbatches, grads)
-                    loss = losses.mean()
-                    metrics = jax.tree.map(lambda m: m.mean(), metrics)
-                else:
-                    (loss, metrics), grads = jax.value_and_grad(
-                        loss_fn, has_aux=True)(params, batch)
-                params2, opt2 = self.opt.step(params, grads, opt_state, hp)
-                return params2, opt2, loss, metrics
-
-            self._step = jax.jit(one_step, donate_argnums=(0, 1))
+    @property
+    def _step(self):
+        return self._program.step
 
     # ------------------------------------------------------------------
     def init(self, seed: int = 0):
-        params = self.arch.init_params(jax.random.PRNGKey(seed))
-        opt_state = self.opt.init(params)
-        return params, opt_state
+        return self._program.init(seed)
 
     def hparams_at(self, step: int) -> dict:
         """The dynamic hparams pytree for (1-based) ``step`` — scheduled lr
         plus any TrainConfig extras; same structure every step, so the
         jitted train step never recompiles.  The schedule is authoritative
         for lr: set it via TrainConfig.lr/schedule, not tcfg.hparams."""
-        return {**self.tcfg.hparams, "lr": self.lr_fn(step)}
+        return self._program.hparams_fn(step)
 
     def fit(self, params, opt_state, batch_iter, *, start_step: int = 0,
             eval_iter=None, ckpt_manager=None) -> dict:
-        tcfg = self.tcfg
-        history = {"step": [], "loss": [], "accuracy": [], "lr": [],
-                   "eval_loss": [], "eval_step": []}
-        hb = None
-        if tcfg.heartbeat_timeout_s > 0:
-            hb = Heartbeat(tcfg.heartbeat_timeout_s,
-                           on_stall=lambda: self.log("HEARTBEAT STALL"))
-            hb.start()
-
-        step_callable = retrying(
-            self._step,
-            on_failure=lambda a, e: self.log(f"step retry {a}: {e}"))
-
-        t_last = time.time()
-        for step in range(start_step, tcfg.total_steps):
-            batch = next(batch_iter)
-            batch = jax.tree.map(jnp.asarray, batch)
-            hp = self.hparams_at(step + 1)
-            lr = hp["lr"]
-            params, opt_state, loss, metrics = step_callable(
-                params, opt_state, batch, hp)
-            dt = time.time() - t_last
-            t_last = time.time()
-            self.straggler.observe(step, dt)
-            if hb:
-                hb.beat()
-            if tcfg.log_every and (step % tcfg.log_every == 0
-                                   or step == tcfg.total_steps - 1):
-                self.log(f"step {step:5d} loss {float(loss):.4f} "
-                         f"acc {float(metrics['accuracy']):.3f} "
-                         f"lr {float(lr):.2e} ({dt*1e3:.0f} ms)")
-            history["step"].append(step)
-            history["loss"].append(float(loss))
-            history["accuracy"].append(float(metrics["accuracy"]))
-            history["lr"].append(float(lr))
-            if (eval_iter is not None and tcfg.eval_every
-                    and (step + 1) % tcfg.eval_every == 0):
-                ev = self.evaluate(params, eval_iter)
-                history["eval_loss"].append(ev["loss"])
-                history["eval_step"].append(step)
-                self.log(f"  eval loss {ev['loss']:.4f} "
-                         f"ppl {ev['ppl']:.2f} acc {ev['accuracy']:.3f}")
-            if (ckpt_manager is not None and tcfg.ckpt_every
-                    and (step + 1) % tcfg.ckpt_every == 0):
-                ckpt_manager.save(step + 1, (params, opt_state),
-                                  extra={"data_step": step + 1})
-        if hb:
-            hb.stop()
-        if ckpt_manager is not None:
-            ckpt_manager.wait()
-        return {"params": params, "opt_state": opt_state,
-                "history": history}
+        hooks = [StragglerHook(self.straggler)]
+        if eval_iter is not None and self.tcfg.eval_every:
+            hooks.append(EvalHook(eval_iter, self.tcfg.eval_every))
+        res = run(self.spec, program=self._program, params=params,
+                  opt_state=opt_state, batch_iter=batch_iter,
+                  ckpt_manager=ckpt_manager, start_step=start_step,
+                  hooks=hooks, log_fn=self.log)
+        return {"params": res.params, "opt_state": res.opt_state,
+                "history": res.history}
 
     def evaluate(self, params, eval_iter, n_batches: int = 4) -> dict:
-        loss_fn = getattr(self, "_eval_fn", None)
-        if loss_fn is None:
-            loss_fn = jax.jit(self.arch.make_loss_fn())
-            self._eval_fn = loss_fn
-        tot, acc = 0.0, 0.0
-        for _ in range(n_batches):
-            batch = jax.tree.map(jnp.asarray, next(eval_iter))
-            loss, metrics = loss_fn(params, batch)
-            tot += float(loss)
-            acc += float(metrics["accuracy"])
-        tot /= n_batches
-        return {"loss": tot, "ppl": float(jnp.exp(tot)),
-                "accuracy": acc / n_batches}
+        hook = EvalHook(eval_iter, every=0, n_batches=n_batches)
+        ctx = _EvalCtx(self._program, params)
+        return hook.evaluate(ctx)
+
+
+@dataclasses.dataclass
+class _EvalCtx:
+    program: object
+    params: object

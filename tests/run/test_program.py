@@ -1,0 +1,200 @@
+"""StepProgram contract: one builder owns the fused/unfused ×
+microbatch matrix, exposes the abstract jit signature (dry-run lowers the
+identical program), and microbatching is equivalence-tested against
+explicit steps — pinning the scan path.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig
+from repro.models.registry import get_arch
+from repro.run import (ModelSpec, OptSpec, RunSpec, StepSpec,
+                       build_step_program)
+
+REPO = Path(__file__).resolve().parents[2]
+
+
+@pytest.fixture(scope="module")
+def arch():
+    return get_arch("h2o-danube-1.8b", smoke=True)
+
+
+def _spec(arch, *, batch, microbatches=1, fused=None, optimizer="adalomo",
+          seq=32):
+    return RunSpec(
+        model=ModelSpec(arch=arch.arch_id, smoke=True),
+        data=DataConfig(vocab=arch.cfg.vocab, seq_len=seq,
+                        global_batch=batch),
+        opt=OptSpec(name=optimizer, lr=1e-3, schedule="constant"),
+        steps=StepSpec(total=4, microbatches=microbatches, fused=fused),
+        log_every=0)
+
+
+def _batch(arch, key, b, s=32):
+    return {"tokens": jax.random.randint(key, (b, s), 0, arch.cfg.vocab),
+            "labels": jax.random.randint(key, (b, s), 0, arch.cfg.vocab)}
+
+
+# ---------------------------------------------------------------------
+# Microbatching equivalence (satellite: pin the scan path)
+# ---------------------------------------------------------------------
+
+def test_fused_microbatch_equals_explicit_sequential_steps_bitwise(arch):
+    """The fused path at microbatches=k on a k·b batch does *sequential
+    per-microbatch updates* (LOMO semantics): it must equal k explicit
+    single-microbatch steps on the k chunks — bitwise, since it is the
+    same math in the same order."""
+    k, b = 2, 2
+    prog_k = build_step_program(_spec(arch, batch=k * b, microbatches=k))
+    prog_1 = build_step_program(_spec(arch, batch=b, microbatches=1))
+    hp = prog_k.hparams_fn(1)  # constant schedule: same hp every step
+
+    big = _batch(arch, jax.random.PRNGKey(1), k * b)
+    chunks = [jax.tree.map(lambda x: x[i * b:(i + 1) * b], big)
+              for i in range(k)]
+
+    p_scan, s_scan = prog_k.init(0)
+    p_scan, s_scan, loss_scan, _ = prog_k.step(p_scan, s_scan, big, hp)
+
+    p_seq, s_seq = prog_1.init(0)
+    losses = []
+    for c in chunks:
+        p_seq, s_seq, loss, _ = prog_1.step(p_seq, s_seq, c, hp)
+        losses.append(loss)
+
+    assert int(s_scan.step) == int(s_seq.step) == k
+    for a, b_ in zip(jax.tree.leaves((p_scan, s_scan)),
+                     jax.tree.leaves((p_seq, s_seq))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+    np.testing.assert_allclose(
+        float(loss_scan), float(np.mean([float(x) for x in losses])),
+        rtol=1e-6)
+
+
+def test_unfused_microbatch_accumulation_matches_full_batch(arch):
+    """The unfused path at microbatches=k accumulates gradients — one
+    update from the mean gradient, which must match the full-batch
+    gradient step to tight tolerance (fp reassociation only)."""
+    k, b = 2, 2
+    prog_k = build_step_program(
+        _spec(arch, batch=k * b, microbatches=k, optimizer="adamw",
+              fused=False))
+    prog_full = build_step_program(
+        _spec(arch, batch=k * b, microbatches=1, optimizer="adamw",
+              fused=False))
+    hp = prog_k.hparams_fn(1)
+    big = _batch(arch, jax.random.PRNGKey(2), k * b)
+
+    p_k, s_k = prog_k.init(0)
+    p_k, s_k, loss_k, _ = prog_k.step(p_k, s_k, big, hp)
+    p_f, s_f = prog_full.init(0)
+    p_f, s_f, loss_f, _ = prog_full.step(p_f, s_f, big, hp)
+
+    assert int(s_k.step) == int(s_f.step) == 1
+    np.testing.assert_allclose(float(loss_k), float(loss_f), rtol=1e-5)
+    for a, b_ in zip(jax.tree.leaves(p_k), jax.tree.leaves(p_f)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=2e-4, atol=1e-6)
+
+
+def test_microbatch_divisibility_error_is_clear(arch):
+    # spec.data is None here, so the check fires at trace time instead
+    # of RunSpec construction — with the same clear message.
+    prog = build_step_program(
+        RunSpec(model=ModelSpec(arch=arch.arch_id, smoke=True),
+                data=None,
+                opt=OptSpec(name="adalomo", lr=1e-3, schedule="constant"),
+                steps=StepSpec(total=2, microbatches=3), log_every=0),
+        arch)
+    bad = _batch(arch, jax.random.PRNGKey(0), 4)
+    p, s = prog.init(0)
+    with pytest.raises(ValueError, match="not divisible by microbatches"):
+        prog.step(p, s, bad, prog.hparams_fn(1))
+
+
+# ---------------------------------------------------------------------
+# Abstract signature: dryrun lowers what train executes
+# ---------------------------------------------------------------------
+
+def test_abstract_args_match_concrete_signature(arch):
+    spec = _spec(arch, batch=4)
+    prog = build_step_program(spec)
+    p_sds, o_sds, b_sds, hp_sds = prog.abstract_args()
+    p, s = prog.init(0)
+    assert jax.tree.structure(p_sds) == jax.tree.structure(p)
+    assert all(a.shape == b_.shape and a.dtype == b_.dtype
+               for a, b_ in zip(jax.tree.leaves(p_sds), jax.tree.leaves(p)))
+    assert jax.tree.structure(o_sds) == jax.tree.structure(s)
+    batch = _batch(arch, jax.random.PRNGKey(0), 4)
+    assert {k: (v.shape, v.dtype) for k, v in b_sds.items()} == \
+        {k: (v.shape, v.dtype) for k, v in batch.items()}
+    assert jax.tree.structure(hp_sds) == \
+        jax.tree.structure(prog.hparams_fn(1))
+
+
+def test_lower_on_abstract_args_then_train_no_retrace(arch):
+    """Lowering the program (what dryrun does) and then training on
+    concrete arrays of the same shapes uses ONE compiled entry — the
+    dry-run artifact is the training program, not a variant."""
+    spec = _spec(arch, batch=4)
+    prog = build_step_program(spec)
+    lowered = prog.lower()
+    assert len(lowered.as_text()) > 0
+    p, s = prog.init(0)
+    batch = _batch(arch, jax.random.PRNGKey(0), 4)
+    for i in range(3):
+        p, s, loss, _ = prog.step(p, s, batch, prog.hparams_fn(i + 1))
+    assert prog.cache_size() == 1, \
+        "training re-traced a program dryrun had already lowered"
+
+
+def test_train_batch_specs_agree_with_input_specs(arch):
+    """The registry's dry-run input_specs and the run layer's train batch
+    signature are the same function — the drift risk the Run API removes."""
+    from repro.configs.shapes import SHAPES
+    for shape_name in arch.supported_cells():
+        sh = SHAPES[shape_name]
+        if sh.kind != "train":
+            continue
+        via_registry = arch.input_specs(shape_name)
+        via_run = arch.train_batch_specs(sh.global_batch, sh.seq_len)
+        assert via_registry == via_run
+
+
+@pytest.mark.slow
+def test_dryrun_build_cell_lowers_via_step_program():
+    """End-to-end: launch/dryrun's train cell builds through
+    build_step_program and lowers under shardings (8 virtual devices;
+    subprocess because the device count locks at first jax import)."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.launch.mesh import make_test_mesh
+from repro.launch.dryrun import build_cell
+mesh = make_test_mesh(8)
+fn, args, in_sh, out_sh, donate, meta = build_cell(
+    "h2o-danube-1.8b", "train_4k", mesh)
+assert meta["kind"] == "train"
+assert fn.__qualname__.startswith("build_step_program"), fn.__qualname__
+assert isinstance(args[3], dict) and "lr" in args[3]
+with mesh:
+    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                  donate_argnums=donate)
+    jfn.lower(*args)
+print("DRYRUN_PROGRAM_OK")
+"""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"),
+               JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"))
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True, timeout=600,
+                          env=env, cwd=str(REPO))
+    assert "DRYRUN_PROGRAM_OK" in proc.stdout, (proc.stdout[-2000:],
+                                                proc.stderr[-4000:])

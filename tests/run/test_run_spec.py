@@ -1,0 +1,141 @@
+"""RunSpec contract: serializable, CLI-parseable, validated."""
+import dataclasses
+
+import pytest
+
+from repro.data.pipeline import DataConfig
+from repro.launch.train import parse_virtual_devices
+from repro.run import (CheckpointSpec, EvalSpec, FaultSpec, MeshSpec,
+                       ModelSpec, OptSpec, RunSpec, StepSpec)
+
+
+def _spec(**kw):
+    base = dict(
+        model=ModelSpec(arch="h2o-danube-1.8b", smoke=True),
+        data=DataConfig(vocab=256, seq_len=64, global_batch=8, seed=3),
+        opt=OptSpec(name="adalomo", lr=1e-3, schedule="constant",
+                    kwargs={"backend": "jnp"},
+                    hparams={"weight_decay": 0.1}),
+        steps=StepSpec(total=7, microbatches=2),
+        mesh=MeshSpec(kind="single", optimized=False),
+        checkpoint=CheckpointSpec(dir="/tmp/x", every=3, resume=True),
+        eval=EvalSpec(every=2, n_batches=2),
+        fault=FaultSpec(heartbeat_timeout_s=5.0, retries=1),
+        log_every=0, seed=11)
+    base.update(kw)
+    return RunSpec(**base)
+
+
+# ---------------------------------------------------------------------
+# Serialization
+# ---------------------------------------------------------------------
+
+def test_json_round_trip_is_lossless():
+    spec = _spec()
+    again = RunSpec.from_json(spec.to_json())
+    assert again == spec
+    # and through an indent/whitespace variation
+    assert RunSpec.from_json(spec.to_json(indent=2)) == spec
+
+
+def test_json_round_trip_with_none_data():
+    spec = _spec(data=None)
+    assert RunSpec.from_json(spec.to_json()) == spec
+    assert spec.to_dict()["data"] is None
+
+
+def test_nested_dataclasses_rehydrate_with_types():
+    again = RunSpec.from_json(_spec().to_json())
+    assert isinstance(again.model, ModelSpec)
+    assert isinstance(again.data, DataConfig)
+    assert isinstance(again.opt, OptSpec)
+    assert again.opt.kwargs == {"backend": "jnp"}
+    assert again.data.local_batch == 8
+
+
+# ---------------------------------------------------------------------
+# Validation / resolution
+# ---------------------------------------------------------------------
+
+def test_bad_schedule_and_mesh_kind_rejected():
+    with pytest.raises(ValueError, match="schedule"):
+        OptSpec(schedule="linear")
+    with pytest.raises(ValueError, match="mesh kind"):
+        MeshSpec(kind="torus")
+    with pytest.raises(ValueError, match="microbatches"):
+        StepSpec(microbatches=0)
+
+
+def test_microbatch_divisibility_checked():
+    with pytest.raises(ValueError, match="not divisible"):
+        _spec(steps=StepSpec(total=3, microbatches=3))
+
+
+def test_lr_and_fused_resolution():
+    assert OptSpec(name="adalomo").resolved_lr() == 5e-4
+    assert OptSpec(name="adamw").resolved_lr() == 2e-5
+    assert OptSpec(name="adamw", lr=0.5).resolved_lr() == 0.5
+    assert StepSpec().resolved_fused("adalomo") is True
+    assert StepSpec().resolved_fused("adamw") is False
+    assert StepSpec(fused=False).resolved_fused("adalomo") is False
+
+
+def test_specs_are_frozen():
+    spec = _spec()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.model.arch = "other"
+
+
+# ---------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------
+
+def test_from_cli_basic():
+    spec = RunSpec.from_cli(
+        ["--arch", "h2o-danube-1.8b", "--smoke", "--steps", "5",
+         "--optimizer", "adamw", "--weight-decay", "0.1", "--unfused",
+         "--batch", "4", "--seq", "32", "--microbatches", "2",
+         "--ckpt-dir", "/tmp/ck", "--ckpt-every", "2", "--resume",
+         "--schedule", "constant", "--seed", "9"])
+    assert spec.model == ModelSpec(arch="h2o-danube-1.8b", smoke=True)
+    assert spec.opt.name == "adamw"
+    assert spec.opt.hparams == {"weight_decay": 0.1}
+    assert spec.opt.schedule == "constant"
+    assert spec.steps == StepSpec(total=5, microbatches=2, fused=False)
+    assert spec.checkpoint.dir == "/tmp/ck"
+    assert spec.checkpoint.resume is True
+    assert spec.data.global_batch == 4 and spec.data.seq_len == 32
+    assert spec.data.vocab == 0      # resolved from the arch at run()
+    assert spec.seed == 9
+
+
+def test_from_cli_requires_arch():
+    with pytest.raises(SystemExit):
+        RunSpec.from_cli(["--steps", "3"])
+
+
+def test_from_cli_round_trips_through_json():
+    spec = RunSpec.from_cli(["--arch", "qwen3-32b", "--steps", "2"])
+    assert RunSpec.from_json(spec.to_json()) == spec
+
+
+# ---------------------------------------------------------------------
+# --virtual-devices pre-argparse extraction (launch/train.py satellite)
+# ---------------------------------------------------------------------
+
+def test_virtual_devices_both_forms():
+    assert parse_virtual_devices(["--virtual-devices", "8"]) == 8
+    assert parse_virtual_devices(["--virtual-devices=8"]) == 8
+    assert parse_virtual_devices(
+        ["--arch", "x", "--virtual-devices=16", "--steps", "2"]) == 16
+    assert parse_virtual_devices(["--arch", "x"]) is None
+
+
+def test_virtual_devices_errors_cleanly():
+    with pytest.raises(SystemExit, match="requires a value"):
+        parse_virtual_devices(["--virtual-devices"])
+    with pytest.raises(SystemExit, match="requires a value"):
+        parse_virtual_devices(["--virtual-devices", "--arch"])
+    for bad in ("abc", "0", "-3", ""):
+        with pytest.raises(SystemExit, match="integer"):
+            parse_virtual_devices([f"--virtual-devices={bad}"])

@@ -1,0 +1,81 @@
+"""Checkpoint-manager crash robustness: discovery must never see a
+partially-written step, and GC can reclaim crash orphans."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree():
+    return {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.zeros((3,))}
+
+
+def _make_partial(ckpt_dir, step, *, with_manifest=True):
+    """Simulate a crash mid-write: a step dir without _COMPLETE."""
+    d = ckpt_dir / f"step_{step:09d}"
+    d.mkdir(parents=True)
+    np.save(d / "arr_00000.npy", np.zeros((2, 3), np.float32))
+    if with_manifest:
+        (d / "manifest.json").write_text(json.dumps(
+            {"step": step, "n_leaves": 1,
+             "leaves": [{"file": "arr_00000.npy", "shape": [2, 3],
+                         "dtype": "float32"}], "extra": {}}))
+    return d
+
+
+def test_crash_mid_write_restores_previous_complete_step(tmp_path):
+    """Regression: a crash between the leaf writes and the _COMPLETE
+    marker must leave the previous complete step as the restore target —
+    the partial dir is invisible to discovery and to restore()."""
+    mgr = CheckpointManager(tmp_path / "ck", async_write=False)
+    tree = _tree()
+    mgr.save(3, tree)
+    assert mgr.latest_step() == 3
+    # crash during the *next* save: step 6 dir exists, no _COMPLETE
+    _make_partial(mgr.dir, 6)
+    (mgr.dir / "_tmp_step_000000009").mkdir()  # orphaned staging dir
+
+    assert mgr.latest_step() == 3, "partial step leaked into discovery"
+    step, got, _ = mgr.restore(template=tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_gc_incomplete_removes_only_orphans(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ck", async_write=False)
+    tree = _tree()
+    mgr.save(3, tree)
+    mgr.save(6, tree)
+    partial = _make_partial(mgr.dir, 9)
+    staging = mgr.dir / "_tmp_step_000000012"
+    staging.mkdir()
+
+    removed = mgr.gc_incomplete()
+    assert sorted(removed) == ["_tmp_step_000000012", "step_000000009"]
+    assert not partial.exists() and not staging.exists()
+    # complete steps untouched, restore unaffected
+    assert sorted(mgr._complete_steps()) == [3, 6]
+    step, got, _ = mgr.restore(template=tree)
+    assert step == 6
+
+
+def test_gc_incomplete_at_construction(tmp_path):
+    d = tmp_path / "ck"
+    mgr = CheckpointManager(d, async_write=False)
+    mgr.save(2, _tree())
+    _make_partial(d, 5, with_manifest=False)
+    mgr2 = CheckpointManager(d, gc_incomplete=True)
+    assert not (d / "step_000000005").exists()
+    assert mgr2.latest_step() == 2
+
+
+def test_restore_with_no_complete_steps_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ck", async_write=False)
+    _make_partial(mgr.dir, 4)
+    assert mgr.latest_step() is None
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(template=_tree())
