@@ -2,6 +2,9 @@
 driven through the Run API (``RunSpec`` + ``run()``)."""
 from __future__ import annotations
 
+import json
+from pathlib import Path
+
 import jax.numpy as jnp
 
 from repro.data.pipeline import DataConfig
@@ -66,3 +69,16 @@ def train_curve(arch: Arch, optimizer: str, *, steps=60, batch=8, seq=128,
 
 def fmt_row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+BENCH_DIR = Path(__file__).resolve().parent
+
+
+def write_bench_json(name: str, payload: dict) -> Path:
+    """Write a committed benchmark artifact ``benchmarks/BENCH_{name}.json``.
+
+    These are checked in (unlike ``benchmarks/artifacts/``) so a reviewer
+    can diff measured numbers without re-running the benchmark."""
+    out = BENCH_DIR / f"BENCH_{name}.json"
+    out.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    return out

@@ -19,6 +19,7 @@ MODULES = [
     "appb_gradnorm",        # Appendix B: ± gradient normalization
     "roofline",             # §Roofline from the dry-run artifacts
     "serve_throughput",     # paged continuous batching vs static batching
+    "packing_efficiency",   # segment packing: packed vs padded tokens/s
 ]
 
 

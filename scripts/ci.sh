@@ -15,20 +15,23 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${FAST:-0}" == "1" ]]; then
   # Fast tier leads with the contract guards: the Opt v2 zero-recompile-
-  # under-hparam-schedule assertions (tests/core/test_api.py) and the
+  # under-hparam-schedule assertions (tests/core/test_api.py), the
   # Run API smoke (tests/run: RunSpec JSON round-trip, a short synthetic
-  # run + checkpoint resume through run(), and the jit cache-size proof
-  # that the hook pipeline adds zero steady-state recompiles) — so an
-  # accidental retrace or run-layer regression fails in seconds, before
-  # the wider suite runs (which then skips those paths to stay within the
-  # single TIMEOUT_S wall-clock bound).
+  # run + checkpoint resume through run(), the packed-batch equivalence
+  # + fault-recovery rewind proofs, and the jit cache-size proof that
+  # the hook pipeline adds zero steady-state recompiles), and the
+  # segment-packing layout invariants (tests/data) — so an accidental
+  # retrace, run-layer, or packing regression fails in seconds, before
+  # the wider suite runs (which then skips those paths to stay within
+  # the single TIMEOUT_S wall-clock bound).
   SECONDS=0
   timeout "$TIMEOUT_S" python -m pytest tests/core/test_api.py tests/run \
-      -m "not slow" -q
+      tests/data -m "not slow" -q
   TIMEOUT_S=$((TIMEOUT_S - SECONDS))
   # `timeout 0` would DISABLE the bound entirely — clamp to >= 1s.
   if (( TIMEOUT_S < 1 )); then TIMEOUT_S=1; fi
-  ARGS+=(-m "not slow" --ignore=tests/core/test_api.py --ignore=tests/run)
+  ARGS+=(-m "not slow" --ignore=tests/core/test_api.py --ignore=tests/run
+         --ignore=tests/data)
 fi
 
 exec timeout "$TIMEOUT_S" python -m pytest "${ARGS[@]}" "$@"

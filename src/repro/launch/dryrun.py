@@ -129,7 +129,7 @@ def _mem_dict(compiled) -> dict:
 
 
 def build_cell(arch_id: str, shape_name: str, mesh, *,
-               optimized: bool = True):
+               optimized: bool = True, packed: bool = False):
     """Return (fn, example_args: tuple of SDS pytrees, in_shardings,
     out_shardings, donate_argnums, meta).
 
@@ -140,7 +140,9 @@ def build_cell(arch_id: str, shape_name: str, mesh, *,
 
     ``optimized=False`` reproduces the paper-faithful baseline: no
     activation-sharding policy, no gradient reduce-scatter constraint
-    (EXPERIMENTS.md §Perf records both)."""
+    (EXPERIMENTS.md §Perf records both).  ``packed=True`` lowers the
+    train cell on the segment-packed batch signature (tokens + labels +
+    segment_ids + positions + loss_mask) instead of the padded one."""
     from repro.configs.shapes import SHAPES
     from repro.models.registry import get_arch
     from repro.sharding import rules as R
@@ -153,7 +155,7 @@ def build_cell(arch_id: str, shape_name: str, mesh, *,
     params_sds = jax.eval_shape(lambda: arch.init_params(jax.random.PRNGKey(0)))
     p_specs = R.param_pspecs(params_sds, axes)
     p_shard = R.to_shardings(p_specs, mesh)
-    batch_sds = arch.input_specs(shape_name)
+    batch_sds = arch.input_specs(shape_name, packed=packed)
     b_shard = R.to_shardings(R.batch_pspecs(batch_sds, axes), mesh)
     n_params = sum(x.size for x in jax.tree.leaves(params_sds))
 
@@ -181,7 +183,7 @@ def build_cell(arch_id: str, shape_name: str, mesh, *,
         spec = RunSpec(
             model=ModelSpec(arch=arch_id),
             data=DataConfig(vocab=arch.cfg.vocab, seq_len=sh.seq_len,
-                            global_batch=sh.global_batch),
+                            global_batch=sh.global_batch, packing=packed),
             opt=OptSpec(name="adalomo", schedule="constant"),
             steps=StepSpec(total=1, fused=True),
             mesh=MeshSpec(kind="multi" if mesh.devices.size > 256
@@ -190,6 +192,14 @@ def build_cell(arch_id: str, shape_name: str, mesh, *,
                                      grad_constraint=gc,
                                      param_constraint=pc)
         args = program.abstract_args()
+        # Shard the batch the program actually takes (its abstract_args),
+        # not the input_specs guess above — under packing the train batch
+        # carries extra leaves (segment_ids/positions/loss_mask).
+        b_shard = R.to_shardings(R.batch_pspecs(args[2], axes), mesh)
+        # Provenance: the exact RunSpec this cell lowers, so the artifact
+        # is replayable through launch/train.py without reconstruction.
+        meta["run_spec"] = spec.to_dict()
+        meta["packed"] = bool(packed)
         opt_sds = args[1]
         o_specs = R.opt_pspecs(opt_sds, params_sds, p_specs, axes)
         o_shard = R.to_shardings(o_specs, mesh)
@@ -223,12 +233,15 @@ def build_cell(arch_id: str, shape_name: str, mesh, *,
 
 
 def run_cell(arch_id: str, shape_name: str, mesh_kind: str, *, force=False,
-             save=True, optimized: bool = True,
+             save=True, optimized: bool = True, packed: bool = False,
              artifact_dir=None) -> dict:
     from repro.launch.mesh import make_production_mesh
 
     adir = Path(artifact_dir) if artifact_dir else ARTIFACT_DIR
-    out_path = adir / f"{arch_id}__{shape_name}__{mesh_kind}.json"
+    cell = f"{arch_id}__{shape_name}__{mesh_kind}"
+    if packed:
+        cell += "__packed"
+    out_path = adir / f"{cell}.json"
     if out_path.exists() and not force:
         return json.loads(out_path.read_text())
 
@@ -236,7 +249,7 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, *, force=False,
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_chips = mesh.devices.size
     fn, args, in_sh, out_sh, donate, meta = build_cell(
-        arch_id, shape_name, mesh, optimized=optimized)
+        arch_id, shape_name, mesh, optimized=optimized, packed=packed)
     with mesh:
         jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                       donate_argnums=donate)
@@ -269,6 +282,11 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, *, force=False,
     if save:
         adir.mkdir(parents=True, exist_ok=True)
         out_path.write_text(json.dumps(res, indent=1))
+        if "run_spec" in res:
+            # Sidecar: the originating RunSpec alone, loadable with
+            # RunSpec.from_json for replay through launch/train.py.
+            out_path.with_suffix(".runspec.json").write_text(
+                json.dumps(res["run_spec"], indent=1) + "\n")
         import gzip
         with gzip.open(out_path.with_suffix(".hlo.gz"), "wt") as f:
             f.write(hlo_text)
@@ -320,8 +338,13 @@ def main(argv=None):
     ap.add_argument("--baseline", action="store_true",
                     help="paper-faithful sharding (no act-policy / "
                          "grad reduce-scatter); writes to dryrun_baseline/")
+    ap.add_argument("--packed", action="store_true",
+                    help="lower train cells on the segment-packed batch "
+                         "layout (DataConfig.packing=True); non-train and "
+                         "non-packable cells are skipped")
     args = ap.parse_args(argv)
 
+    from repro.configs.shapes import SHAPES
     from repro.models.registry import ARCH_IDS, get_arch
 
     if args.all:
@@ -332,6 +355,11 @@ def main(argv=None):
         shapes = ([args.shape] if args.shape else
                   get_arch(args.arch, smoke=True).supported_cells())
         cells = [(args.arch, s) for s in shapes]
+    if args.packed:
+        cells = [(a, s) for a, s in cells
+                 if SHAPES[s].kind == "train"
+                 and get_arch(a, smoke=True).supports_packing()]
+        assert cells, "--packed: no packable train cells selected"
     meshes = {"single": ["single"], "multi": ["multi"],
               "both": ["single", "multi"]}[args.mesh]
 
@@ -341,9 +369,12 @@ def main(argv=None):
     for arch_id, shape_name in cells:
         for mk in meshes:
             tag = f"{arch_id} × {shape_name} × {mk}"
+            if args.packed:
+                tag += " × packed"
             try:
                 res = run_cell(arch_id, shape_name, mk, force=args.force,
                                optimized=not args.baseline,
+                               packed=args.packed,
                                artifact_dir=adir)
                 terms = roofline_terms(res)
                 print(f"OK   {tag:55s} compile={res['compile_s']:7.1f}s "

@@ -104,11 +104,16 @@ class MaskSpec:
     window: Optional[int] = None       # SWA: attend to [pos-window+1, pos]
     # prefix-LM: kv positions < prefix_len[b] are visible to every query
     has_prefix: bool = False
+    # packed-segment batches: attention also requires equal segment ids
+    # (q_seg/kv_seg arrays travel alongside positions); incompatible with
+    # has_prefix.  Static at trace time like every other MaskSpec field.
+    segmented: bool = False
 
 
 def _mask_block(q_pos: Array, kv_pos: Array, spec: MaskSpec,
-                prefix_len: Optional[Array]) -> Array:
-    """Bool mask block (..., Sq, Skv) from position vectors."""
+                prefix_len: Optional[Array], q_seg: Optional[Array] = None,
+                kv_seg: Optional[Array] = None) -> Array:
+    """Bool mask block (..., Sq, Skv) from position (and segment) vectors."""
     m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], kv_pos.shape[-1]),
                  dtype=bool)
     q = q_pos[..., :, None]
@@ -117,12 +122,79 @@ def _mask_block(q_pos: Array, kv_pos: Array, spec: MaskSpec,
         m = m & (q >= k)
     if spec.window is not None:
         m = m & (q - k < spec.window)
+    if q_seg is not None:
+        m = m & (q_seg[..., :, None] == kv_seg[..., None, :])
     if spec.has_prefix and prefix_len is not None:
         pl = prefix_len.reshape(prefix_len.shape + (1, 1))
         m = m | (k < pl)
         if spec.window is not None:
             m = m & ((q - k < spec.window) | (k < pl))
     return m
+
+
+def _scan_block_mask(qp: Array, kp: Array, qs: Optional[Array],
+                     ks: Optional[Array], spec: MaskSpec,
+                     pl4: Optional[Array]) -> Array:
+    """Mask for one (q_block, kv_block) pair inside the blockwise scans.
+
+    qp: (T, qb) tile-shared metadata or (B, T, qb) per-row (packed
+    segments); kp: (kb,) or (B, kb) correspondingly; qs/ks: segment-id
+    blocks of the same shapes, or None.  Returns a mask broadcastable
+    against score blocks [B, T, K, G, qb, kb]: leading dim 1 when the
+    metadata is row-invariant, B otherwise.
+    """
+    batched = qp.ndim == 3
+    qe = qp[..., :, None]                           # (T,qb,1) | (B,T,qb,1)
+    ke = kp[:, None, None, :] if batched else kp[None, None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qe.shape, ke.shape), bool)
+    if spec.causal:
+        m = m & (qe >= ke)
+    if spec.window is not None:
+        m = m & (qe - ke < spec.window)
+    if qs is not None:
+        kse = ks[:, None, None, :] if batched else ks[None, None, :]
+        m = m & (qs[..., :, None] == kse)
+    if spec.has_prefix and pl4 is not None:
+        # prefix-LM is unpacked-only (1-D metadata): lift to (B,T,qb,kb)
+        m = m[None] | (ke[None] < pl4)
+        if spec.window is not None:
+            m = m & ((qe - ke < spec.window)[None] | (ke[None] < pl4))
+        return m[:, :, None, None]                  # (B,T,1,1,qb,kb)
+    if batched:
+        return m[:, :, None, None]                  # (B,T,1,1,qb,kb)
+    return m[None, :, None, None]                   # (1,T,1,1,qb,kb)
+
+
+def _q_meta_blocks(a: Array, T: int, Sloc: int, pq: int, qb: int,
+                   fill) -> Array:
+    """Tile + pad + block query metadata (positions / segment ids):
+    (Sq,) -> [nq, T, qb]; (B, Sq) -> [nq, B, T, qb]."""
+    a = a.reshape(a.shape[:-1] + (T, Sloc))
+    if pq:
+        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pq)],
+                    constant_values=fill)
+    nq = (Sloc + pq) // qb
+    a = a.reshape(a.shape[:-1] + (nq, qb))
+    if a.ndim == 3:
+        return a.transpose(1, 0, 2)
+    return a.transpose(2, 0, 1, 3)
+
+
+def _kv_meta_blocks(a: Array, pk: int, kb: int, fill) -> Array:
+    """Pad + block kv metadata: (Skv,) -> [nk, kb]; (B, Skv) -> [nk, B, kb]."""
+    if pk:
+        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pk)],
+                    constant_values=fill)
+    nk = a.shape[-1] // kb
+    a = a.reshape(a.shape[:-1] + (nk, kb))
+    return a if a.ndim == 2 else a.transpose(1, 0, 2)
+
+
+# Fill values for padded metadata slots: a padded query (pos -1, seg -1)
+# and a padded kv (pos 2**30, seg -2) can never satisfy causal/window or
+# segment-equality terms against any real slot.
+_QPOS_FILL, _KPOS_FILL = -1, 2 ** 30
+_QSEG_FILL, _KSEG_FILL = -1, -2
 
 
 # --------------------------------------------------------------------------
@@ -141,10 +213,12 @@ def _direct_attention(q, k, v, mask, scale):
 
 def _block_attention(q, k, v, q_pos, kv_pos, spec, prefix_len, scale,
                      q_block: int, kv_block: int, tiles: int = 1,
-                     return_lse: bool = False):
+                     return_lse: bool = False, q_seg=None, kv_seg=None):
     """Two-level blockwise attention with online softmax (flash-style).
 
-    q: [B,Sq,K,G,dh]; k/v: [B,Skv,K,dh]; q_pos: (Sq,), kv_pos: (Skv,).
+    q: [B,Sq,K,G,dh]; k/v: [B,Skv,K,dh]; q_pos: (Sq,) shared across rows,
+    or (B,Sq) per-row for packed-segment batches (then q_seg/kv_seg carry
+    matching segment ids and attention never crosses a segment).
     Scans query blocks (outer) and KV blocks (inner); score blocks of shape
     [B,T,K,G,qb,kb] are the only O(S·block) intermediates.
 
@@ -157,6 +231,9 @@ def _block_attention(q, k, v, q_pos, kv_pos, spec, prefix_len, scale,
     B, Sq, K, G, dh = q.shape
     dv = v.shape[-1]
     Skv = k.shape[1]
+    if q_seg is not None and q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos, (B, Sq))
+        kv_pos = jnp.broadcast_to(kv_pos, (B, Skv))
     T = tiles if (tiles > 1 and Sq % tiles == 0) else 1
     Sloc = Sq // T
     qb = min(q_block, Sloc)
@@ -164,53 +241,49 @@ def _block_attention(q, k, v, q_pos, kv_pos, spec, prefix_len, scale,
     # pad local q length and kv to block multiples
     pq = (-Sloc) % qb
     pk = (-Skv) % kb
+    # metadata (positions / segment ids) -> padded per-tile blocks; fills
+    # chosen so padded slots can never pass the mask against real slots
+    qps = _q_meta_blocks(q_pos, T, Sloc, pq, qb, _QPOS_FILL)
+    qss = (_q_meta_blocks(q_seg, T, Sloc, pq, qb, _QSEG_FILL)
+           if q_seg is not None else None)
+    kps = _kv_meta_blocks(kv_pos, pk, kb, _KPOS_FILL)
+    kss = (_kv_meta_blocks(kv_seg, pk, kb, _KSEG_FILL)
+           if kv_seg is not None else None)
+    seg = qss is not None
     if pq:  # pad within each tile: reshape → pad → flatten
         q = q.reshape(B, T, Sloc, K, G, dh)
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
         q = q.reshape(B, T * (Sloc + pq), K, G, dh)
-        q_pos = jnp.pad(q_pos.reshape(T, Sloc), ((0, 0), (0, pq)),
-                        constant_values=-1).reshape(-1)
         Sloc += pq
     if pk:
         k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
-        kv_pos = jnp.pad(kv_pos, (0, pk), constant_values=2**30)
     nq, nk = Sloc // qb, k.shape[1] // kb
 
     # [nq, B, T, qb, K, G, dh]; the T dim carries the tp sharding
     qs = shard_act(q.reshape(B, T, nq, qb, K, G, dh), "q_tiled"
                    ).transpose(2, 0, 1, 3, 4, 5, 6)
-    qps = q_pos.reshape(T, nq, qb).transpose(1, 0, 2)     # [nq, T, qb]
     ks = k.reshape(B, nk, kb, K, dh).transpose(1, 0, 2, 3, 4)
     vs = v.reshape(B, nk, kb, K, dv).transpose(1, 0, 2, 3, 4)
-    kps = kv_pos.reshape(nk, kb)
 
-    if prefix_len is not None:
-        pl4 = prefix_len.reshape(B, 1, 1, 1)
+    pl4 = (prefix_len.reshape(B, 1, 1, 1)
+           if prefix_len is not None else None)
 
     def q_step(_, q_in):
-        qi, qp = q_in  # [B,T,qb,K,G,dh], (T,qb)
+        if seg:
+            qi, qp, qsg = q_in  # [B,T,qb,K,G,dh], (T,qb)|(B,T,qb), seg ids
+        else:
+            (qi, qp), qsg = q_in, None
 
         def kv_step(carry, kv_in):
             m_run, l_run, acc = carry
-            ki, vi, kp = kv_in
+            if seg:
+                ki, vi, kp, ksg = kv_in
+            else:
+                (ki, vi, kp), ksg = kv_in, None
             logits = jnp.einsum("btqkgd,bskd->btkgqs", qi, ki,
                                 preferred_element_type=jnp.float32) * scale
-            qe = qp[:, :, None]                      # (T, qb, 1)
-            ke = kp[None, None, :]                   # (1, 1, kb)
-            mask = jnp.ones((T, qb, kb), bool)
-            if spec.causal:
-                mask = mask & (qe >= ke)
-            if spec.window is not None:
-                mask = mask & (qe - ke < spec.window)
-            if spec.has_prefix and prefix_len is not None:
-                mask = mask[None] | (ke[None] < pl4)     # (B,T,qb,kb)
-                if spec.window is not None:
-                    mask = mask & ((qe - ke < spec.window)[None]
-                                   | (ke[None] < pl4))
-                mask = mask[:, :, None, None]            # (B,T,1,1,qb,kb)
-            else:
-                mask = mask[None, :, None, None]         # (1,T,1,1,qb,kb)
+            mask = _scan_block_mask(qp, kp, qsg, ksg, spec, pl4)
             logits = jnp.where(mask, logits, NEG_INF)
             m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
             p = jnp.exp(logits - m_new[..., None])
@@ -223,14 +296,16 @@ def _block_attention(q, k, v, q_pos, kv_pos, spec, prefix_len, scale,
         m0 = jnp.full((B, T, K, G, qb), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, T, K, G, qb), jnp.float32)
         a0 = jnp.zeros((B, T, K, G, qb, dv), jnp.float32)
-        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, kps))
+        kv_xs = (ks, vs, kps, kss) if seg else (ks, vs, kps)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), kv_xs)
         out = acc / jnp.maximum(l_f, 1e-30)[..., None]
         out = out.astype(v.dtype)
         lse = m_f + jnp.log(jnp.maximum(l_f, 1e-30))  # [B,T,K,G,qb]
         return None, (out.transpose(0, 1, 4, 2, 3, 5),  # [B,T,qb,K,G,dv]
                       lse.transpose(0, 1, 4, 2, 3))     # [B,T,qb,K,G]
 
-    _, (outs, lses) = jax.lax.scan(q_step, None, (qs, qps))
+    q_xs = (qs, qps, qss) if seg else (qs, qps)
+    _, (outs, lses) = jax.lax.scan(q_step, None, q_xs)
     out = outs.transpose(1, 2, 0, 3, 4, 5, 6).reshape(
         B, T * nq * qb, K, G, dv)
     lse = lses.transpose(1, 2, 0, 3, 4, 5).reshape(B, T * nq * qb, K, G)
@@ -245,7 +320,8 @@ def _block_attention(q, k, v, q_pos, kv_pos, spec, prefix_len, scale,
 
 
 def _flash_attention(q, k, v, q_pos, kv_pos, spec, prefix_len, scale,
-                     q_block: int, kv_block: int, tiles: int):
+                     q_block: int, kv_block: int, tiles: int,
+                     q_seg=None, kv_seg=None):
     """Blockwise attention with a flash-style custom VJP.
 
     Differentiating through the online-softmax scan makes jax save every
@@ -253,17 +329,25 @@ def _flash_attention(q, k, v, q_pos, kv_pos, spec, prefix_len, scale,
     tensors that dominated the qwen3 train cell's memory term (§Perf H5).
     The custom VJP saves only (q, k, v, out, lse) and *recomputes* the
     probabilities blockwise in the backward pass, exactly like
-    FlashAttention's backward.
+    FlashAttention's backward.  Segment masking (packed batches) is part
+    of the recomputed mask, so the backward drops cross-segment terms the
+    same way the forward does.
     """
+    if q_seg is not None and q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos, (q.shape[0], q.shape[1]))
+        kv_pos = jnp.broadcast_to(kv_pos, (k.shape[0], k.shape[1]))
+
     @jax.custom_vjp
     def fa(q, k, v):
         return _block_attention(q, k, v, q_pos, kv_pos, spec, prefix_len,
-                                scale, q_block, kv_block, tiles)
+                                scale, q_block, kv_block, tiles,
+                                q_seg=q_seg, kv_seg=kv_seg)
 
     def fwd(q, k, v):
         out, lse = _block_attention(q, k, v, q_pos, kv_pos, spec,
                                     prefix_len, scale, q_block, kv_block,
-                                    tiles, return_lse=True)
+                                    tiles, return_lse=True,
+                                    q_seg=q_seg, kv_seg=kv_seg)
         return out, (q, k, v, out, lse)
 
     def bwd(res, dout):
@@ -277,8 +361,7 @@ def _flash_attention(q, k, v, q_pos, kv_pos, spec, prefix_len, scale,
         kb = min(kv_block, Skv)
         pq = (-Sloc) % qb
         pk = (-Skv) % kb
-        qp_full = q_pos
-        kvp_full = kv_pos
+        seg = q_seg is not None
         D = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
                     axis=-1)  # [B,Sq,K,G]
 
@@ -293,15 +376,17 @@ def _flash_attention(q, k, v, q_pos, kv_pos, spec, prefix_len, scale,
         dot_ = pad_q(dout)
         lset = pad_q(lse, fill=0.0)
         Dt = pad_q(D)
-        qpt = qp_full.reshape(T, Sloc)
-        if pq:
-            qpt = jnp.pad(qpt, ((0, 0), (0, pq)), constant_values=-1)
+        qps = _q_meta_blocks(q_pos, T, Sloc, pq, qb, _QPOS_FILL)
+        qss = (_q_meta_blocks(q_seg, T, Sloc, pq, qb, _QSEG_FILL)
+               if seg else None)
+        kps = _kv_meta_blocks(kv_pos, pk, kb, _KPOS_FILL)
+        kss = (_kv_meta_blocks(kv_seg, pk, kb, _KSEG_FILL)
+               if seg else None)
         Slp = Sloc + pq
         nq = Slp // qb
         if pk:
             k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
             v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
-            kvp_full = jnp.pad(kvp_full, (0, pk), constant_values=2**30)
         nk = k.shape[1] // kb
 
         # [nq, B, T, qb, ...] blocks
@@ -311,40 +396,30 @@ def _flash_attention(q, k, v, q_pos, kv_pos, spec, prefix_len, scale,
 
         qs, dos = blk(qt), blk(dot_)
         lses, Ds = blk(lset), blk(Dt)
-        qps = qpt.reshape(T, nq, qb).transpose(1, 0, 2)
         ks = k.reshape(B, nk, kb, K, dh).transpose(1, 0, 2, 3, 4)
         vs = v.reshape(B, nk, kb, K, dvd).transpose(1, 0, 2, 3, 4)
-        kps = kvp_full.reshape(nk, kb)
         pl4 = (prefix_len.reshape(B, 1, 1, 1)
                if prefix_len is not None else None)
 
         def q_step(carry, xs):
             dk_acc, dv_acc = carry  # [nk,B,kb,K,dh/dv] fp32
-            qi, doi, lsei, Di, qp = xs
+            if seg:
+                qi, doi, lsei, Di, qp, qsg = xs
+            else:
+                (qi, doi, lsei, Di, qp), qsg = xs, None
             # btkgq layouts for lse/D
             lse_t = lsei.transpose(0, 1, 3, 4, 2)  # [B,T,K,G,qb]
             D_t = Di.transpose(0, 1, 3, 4, 2)
 
             def kv_step(dq_acc, xs2):
-                ki, vi, kp = xs2
+                if seg:
+                    ki, vi, kp, ksg = xs2
+                else:
+                    (ki, vi, kp), ksg = xs2, None
                 logits = jnp.einsum(
                     "btqkgd,bskd->btkgqs", qi, ki,
                     preferred_element_type=jnp.float32) * scale
-                qe = qp[:, :, None]
-                ke = kp[None, None, :]
-                mask = jnp.ones((T, qb, kb), bool)
-                if spec.causal:
-                    mask = mask & (qe >= ke)
-                if spec.window is not None:
-                    mask = mask & (qe - ke < spec.window)
-                if spec.has_prefix and pl4 is not None:
-                    maskb = mask[None] | (ke[None] < pl4)
-                    if spec.window is not None:
-                        maskb = maskb & ((qe - ke < spec.window)[None]
-                                         | (ke[None] < pl4))
-                    maskb = maskb[:, :, None, None]
-                else:
-                    maskb = mask[None, :, None, None]
+                maskb = _scan_block_mask(qp, kp, qsg, ksg, spec, pl4)
                 p = jnp.where(maskb,
                               jnp.exp(logits - lse_t[..., None]), 0.0)
                 dv_b = jnp.einsum("btkgqs,btqkgv->bskv", p,
@@ -360,13 +435,16 @@ def _flash_attention(q, k, v, q_pos, kv_pos, spec, prefix_len, scale,
                 return dq_acc + dq_b, (dk_b, dv_b)
 
             dq0 = jnp.zeros(qi.shape, jnp.float32)
-            dq_i, (dk_js, dv_js) = jax.lax.scan(kv_step, dq0, (ks, vs, kps))
+            kv_xs = (ks, vs, kps, kss) if seg else (ks, vs, kps)
+            dq_i, (dk_js, dv_js) = jax.lax.scan(kv_step, dq0, kv_xs)
             return (dk_acc + dk_js, dv_acc + dv_js), dq_i
 
         dk0 = jnp.zeros((nk, B, kb, K, dh), jnp.float32)
         dv0 = jnp.zeros((nk, B, kb, K, dvd), jnp.float32)
+        q_xs = ((qs, dos, lses, Ds, qps, qss) if seg
+                else (qs, dos, lses, Ds, qps))
         (dk_stk, dv_stk), dq_blocks = jax.lax.scan(
-            q_step, (dk0, dv0), (qs, dos, lses, Ds, qps))
+            q_step, (dk0, dv0), q_xs)
         dq = dq_blocks.transpose(1, 2, 0, 3, 4, 5, 6).reshape(
             B, T, Slp, K, G, dh)[:, :, :Sloc].reshape(B, Sq, K, G, dh)
         dk = dk_stk.transpose(1, 0, 2, 3, 4).reshape(
@@ -428,9 +506,11 @@ def attention(
     v: Array,              # [B, Skv, K, dh]
     *,
     spec: MaskSpec,
-    q_pos: Array,          # (Sq,) int32 absolute positions
-    kv_pos: Array,         # (Skv,) int32
+    q_pos: Array,          # (Sq,) int32 positions, or (B, Sq) when packed
+    kv_pos: Array,         # (Skv,) int32, or (B, Skv)
     prefix_len: Optional[Array] = None,   # (B,) for prefix-LM
+    q_seg: Optional[Array] = None,        # (B, Sq) segment ids (packed)
+    kv_seg: Optional[Array] = None,       # (B, Skv)
     scale: Optional[float] = None,
     force_direct: bool = False,
     use_flash_vjp: bool = True,   # False inside lax.cond (jax lowering bug)
@@ -440,6 +520,11 @@ def attention(
     K = k.shape[2]
     assert H % K == 0, (H, K)
     assert k.shape[-1] == dh, (k.shape, dh)
+    assert spec.segmented == (q_seg is not None), \
+        "MaskSpec.segmented must match whether segment ids are passed"
+    if q_seg is not None:
+        assert not spec.has_prefix, \
+            "packed-segment batches are incompatible with prefix-LM masks"
     dv = v.shape[-1]
     G = H // K
     qg = q.reshape(B, Sq, K, G, dh)
@@ -447,10 +532,11 @@ def attention(
     Skv = k.shape[1]
 
     if force_direct or max(Sq, Skv) <= _DIRECT_ATTN_MAX_SEQ:
-        mask = _mask_block(q_pos, kv_pos, spec, prefix_len)
+        mask = _mask_block(q_pos, kv_pos, spec, prefix_len,
+                           q_seg=q_seg, kv_seg=kv_seg)
         mask = mask[None, None, None] if mask.ndim == 2 else mask[:, None, None]
         out = _direct_attention(qg, k, v, mask, scale)
-    elif (spec.window is not None and not spec.has_prefix
+    elif (spec.window is not None and not spec.has_prefix and q_seg is None
           and Skv > spec.window + _Q_BLOCK):
         out = _swa_gather_attention(qg, k, v, q_pos, kv_pos, spec, scale,
                                     _Q_BLOCK)
@@ -460,7 +546,8 @@ def attention(
         v = shard_act(v, "kv_full")
         impl = _flash_attention if use_flash_vjp else _block_attention
         out = impl(qg, k, v, q_pos, kv_pos, spec, prefix_len,
-                   scale, _Q_BLOCK, _KV_BLOCK, tiles=seq_tiles(Sq))
+                   scale, _Q_BLOCK, _KV_BLOCK, tiles=seq_tiles(Sq),
+                   q_seg=q_seg, kv_seg=kv_seg)
     return out.reshape(B, Sq, H, dv)
 
 

@@ -129,18 +129,41 @@ class Arch:
         cells = cells_for(self.arch_id)
         return cells
 
+    def supports_packing(self) -> bool:
+        """Packed-segment batches need the transformer train path with
+        plain causal/SWA masks (no prefix/modality prefix/MTP)."""
+        cfg = self.cfg
+        return (self.family == "transformer"
+                and not getattr(cfg, "prefix_lm", False)
+                and not getattr(cfg, "n_prefix_tokens", 0)
+                and not getattr(cfg, "mtp", False))
+
     def train_batch_specs(self, batch: int, seq_len: int,
-                          *, labels: bool = True) -> dict:
+                          *, labels: bool = True,
+                          packed: bool = False) -> dict:
         """ShapeDtypeStruct train batch for an explicit (batch, seq_len) —
         the signature contract between the data layer
         (``repro.run.data.make_batch_iter`` yields exactly these leaves)
         and the step program (``StepProgram.abstract_args`` lowers on
-        them).  ``labels=False`` gives the prefill subset."""
+        them).  ``labels=False`` gives the prefill subset; ``packed=True``
+        adds the packed-segment leaves (DESIGN.md "Packed sequence
+        layout")."""
         cfg = self.cfg
         B, S = batch, seq_len
+        if packed and not self.supports_packing():
+            raise ValueError(
+                f"packing is not supported for arch {self.arch_id!r} "
+                f"(family={self.family}; prefix-LM/modality-prefix/MTP "
+                f"batches have extra sequence structure packing would "
+                f"break)")
         out = {"tokens": SDS((B, S), jnp.int32)}
         if labels:
             out["labels"] = SDS((B, S), jnp.int32)
+        if packed:
+            out["segment_ids"] = SDS((B, S), jnp.int32)
+            out["positions"] = SDS((B, S), jnp.int32)
+            out["loss_mask"] = SDS((B, S), jnp.bool_)
+            return out
         if self.family == "encdec":
             out["frames"] = SDS((B, cfg.n_frames, cfg.d_model),
                                 jnp.float32)
@@ -152,12 +175,14 @@ class Arch:
             out["labels_mtp"] = SDS((B, S), jnp.int32)
         return out
 
-    def input_specs(self, shape_name: str) -> dict:
+    def input_specs(self, shape_name: str, *, packed: bool = False) -> dict:
         """ShapeDtypeStruct batch for the given assigned shape."""
         sh = SHAPES[shape_name]
         if sh.kind in ("train", "prefill"):
             return self.train_batch_specs(sh.global_batch, sh.seq_len,
-                                          labels=sh.kind == "train")
+                                          labels=sh.kind == "train",
+                                          packed=packed and
+                                          sh.kind == "train")
         # decode: one new token against a seq_len-deep cache
         return {"tokens": SDS((sh.global_batch, 1), jnp.int32)}
 

@@ -178,7 +178,8 @@ def init_params(key, cfg: LMConfig) -> dict:
 # --------------------------------------------------------------------------
 
 def _gqa_attn(p: dict, cfg: LMConfig, h: Array, pos: Array,
-              prefix_len: Optional[Array]) -> Array:
+              prefix_len: Optional[Array],
+              seg: Optional[Array] = None) -> Array:
     B, S, _ = h.shape
     H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = shard_act(L.dense(h, p["wq"]).reshape(B, S, H, dh), "heads")
@@ -188,19 +189,22 @@ def _gqa_attn(p: dict, cfg: LMConfig, h: Array, pos: Array,
         q = L.rmsnorm(q, p["q_norm"]["scale"])
         k = L.rmsnorm(k, p["k_norm"]["scale"])
     d_rot = int(dh * cfg.rope_pct) // 2 * 2
+    # packed batches: pos is (B, S) with per-segment restarts, so RoPE
+    # phases restart at each document boundary (sin/cos broadcast per row)
     sin, cos = L.rope_sincos(pos, d_rot, cfg.rope_theta)
     q = L.apply_rope(q, sin, cos, cfg.rope_pct)
     k = L.apply_rope(k, sin, cos, cfg.rope_pct)
     spec = L.MaskSpec(causal=True, window=cfg.window,
-                      has_prefix=cfg.prefix_lm)
+                      has_prefix=cfg.prefix_lm, segmented=seg is not None)
     o = L.attention(q, k, v, spec=spec, q_pos=pos, kv_pos=pos,
-                    prefix_len=prefix_len)
+                    prefix_len=prefix_len, q_seg=seg, kv_seg=seg)
     o = shard_act(o, "heads")
     return shard_act(L.dense(o.reshape(B, S, H * dh), p["wo"]), "hidden")
 
 
 def _mla_attn(p: dict, cfg: LMConfig, h: Array, pos: Array,
-              prefix_len: Optional[Array]) -> Array:
+              prefix_len: Optional[Array],
+              seg: Optional[Array] = None) -> Array:
     """MLA (train/prefill path): latent KV is up-projected per head."""
     m = cfg.mla
     B, S, _ = h.shape
@@ -222,10 +226,11 @@ def _mla_attn(p: dict, cfg: LMConfig, h: Array, pos: Array,
                         axis=-1)
     qf = jnp.concatenate([q_nope, q_rope], axis=-1)
     spec = L.MaskSpec(causal=True, window=cfg.window,
-                      has_prefix=cfg.prefix_lm)
+                      has_prefix=cfg.prefix_lm, segmented=seg is not None)
     scale = (m.d_nope + m.d_rope) ** -0.5
     o = shard_act(L.attention(qf, k, v, spec=spec, q_pos=pos, kv_pos=pos,
-                              prefix_len=prefix_len, scale=scale), "heads")
+                              prefix_len=prefix_len, q_seg=seg, kv_seg=seg,
+                              scale=scale), "heads")
     return shard_act(L.dense(o.reshape(B, S, H * m.d_v), p["wo"]), "hidden")
 
 
@@ -242,11 +247,14 @@ def make_block_body(cfg: LMConfig):
         prefix_len = ctx_act.get("prefix")
         if prefix_len is not None:
             prefix_len = jax.lax.stop_gradient(prefix_len).astype(jnp.int32)
+        seg = ctx_act.get("seg")
+        if seg is not None:
+            seg = jax.lax.stop_gradient(seg).astype(jnp.int32)
         h = L.norm_apply(p["ln1"], x, kind=cfg.norm)
         if cfg.mla is not None:
-            x = x + _mla_attn(p["attn"], cfg, h, pos, prefix_len)
+            x = x + _mla_attn(p["attn"], cfg, h, pos, prefix_len, seg)
         else:
-            x = x + _gqa_attn(p["attn"], cfg, h, pos, prefix_len)
+            x = x + _gqa_attn(p["attn"], cfg, h, pos, prefix_len, seg)
         h = L.norm_apply(p["ln2"], x, kind=cfg.norm)
         if cfg.moe is not None:
             y, aux = moe_ffn(p["moe"], h, cfg.moe)
@@ -305,6 +313,16 @@ def make_prologue(cfg: LMConfig):
 
 def make_pro_ctx(cfg: LMConfig):
     def pro_ctx(outer, batch):
+        # ctx activations are float32 so the fused engine's generic
+        # zero-cotangent plumbing stays vjp-safe; bodies stop_gradient
+        # and cast back to int32.
+        if "segment_ids" in batch:
+            if cfg.prefix_lm or cfg.n_prefix_tokens or cfg.mtp:
+                raise ValueError(
+                    "packed (segment-id) batches are not supported for "
+                    "prefix-LM / modality-prefix / MTP architectures")
+            return {"pos": batch["positions"].astype(jnp.float32),
+                    "seg": batch["segment_ids"].astype(jnp.float32)}
         S = batch["tokens"].shape[1] + cfg.n_prefix_tokens
         ctx = {"pos": jnp.arange(S, dtype=jnp.float32)}
         if cfg.prefix_lm:

@@ -11,8 +11,8 @@ pipeline: one entrypoint for train / dryrun / benchmarks (DESIGN.md
     program.lower()                        # lowers — no loop duplication
 """
 from repro.run.hooks import (CheckpointHook, EvalHook, HeartbeatHook,
-                             HistoryHook, Hook, LoggingHook, StepEvent,
-                             StragglerHook, TimingHook)
+                             HistoryHook, Hook, LoggingHook, MetricsHook,
+                             StepEvent, StragglerHook, TimingHook)
 from repro.run.program import StepProgram, build_step_program
 from repro.run.runner import RunContext, RunResult, run
 from repro.run.spec import (DEFAULT_LRS, CheckpointSpec, EvalSpec,
@@ -23,7 +23,8 @@ __all__ = [
     "RunSpec", "ModelSpec", "OptSpec", "StepSpec", "MeshSpec",
     "CheckpointSpec", "EvalSpec", "FaultSpec", "DEFAULT_LRS",
     "StepProgram", "build_step_program",
-    "Hook", "StepEvent", "HistoryHook", "LoggingHook", "EvalHook",
-    "CheckpointHook", "HeartbeatHook", "StragglerHook", "TimingHook",
+    "Hook", "StepEvent", "HistoryHook", "LoggingHook", "MetricsHook",
+    "EvalHook", "CheckpointHook", "HeartbeatHook", "StragglerHook",
+    "TimingHook",
     "run", "RunResult", "RunContext",
 ]

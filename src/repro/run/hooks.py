@@ -26,14 +26,16 @@ Hooks are host-side only: they read ``ctx.params/opt_state`` and device
 scalars but never feed anything back into the jitted step, which is why
 the pipeline adds **zero steady-state recompiles** (asserted in
 ``tests/run/test_hooks.py``).  The default pipeline order (straggler →
-heartbeat → history → logging → eval → checkpoint) puts measurement
-before side effects: a checkpoint at step N always contains exactly the
-state whose metrics step N's hooks observed.
+heartbeat → history → logging → metrics → eval → checkpoint) puts
+measurement before side effects: a checkpoint at step N always contains
+exactly the state whose metrics step N's hooks observed.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
+from pathlib import Path
 from typing import Any, Callable, Optional
 
 from repro.train.fault import Heartbeat, StragglerMonitor
@@ -121,6 +123,64 @@ class LoggingHook(Hook):
     def on_eval(self, ctx, step: int, metrics: dict) -> None:
         self.log(f"  eval loss {metrics['loss']:.4f} "
                  f"ppl {metrics['ppl']:.2f} acc {metrics['accuracy']:.3f}")
+
+
+class MetricsHook(Hook):
+    """JSONL metrics exporter: one record per observed step — step, loss,
+    lr, wall dt, real-token throughput (tokens/s from the step's masked-CE
+    ``ntokens`` metric) and padding efficiency (real tokens / slot
+    tokens).  Under segment packing the efficiency column is the padding
+    tax the packer recovered; for padded ragged batches it shows what is
+    being lost.  Honors the rewind contract like :class:`HistoryHook`:
+    ``on_recover`` drops records at/after the restored step and rewrites
+    the file, so the JSONL always reads as the uninterrupted run's
+    record."""
+
+    def __init__(self, path, every: int = 1):
+        self.path = str(path)
+        self.every = max(1, int(every))
+        self.records: list = []
+        self._slot_tokens: Optional[int] = None
+        self._fh = None
+
+    def on_run_start(self, ctx) -> None:
+        d = ctx.spec.data
+        if d is not None:
+            self._slot_tokens = d.global_batch * d.seq_len
+        parent = Path(self.path).parent
+        if str(parent) not in ("", "."):
+            parent.mkdir(parents=True, exist_ok=True)
+        self._fh = open(self.path, "w")
+
+    def on_step_end(self, ctx, ev: StepEvent) -> None:
+        if ev.step % self.every:
+            return
+        ntok = float(ev.metrics.get("ntokens", 0.0))
+        rec = {"step": ev.step, "loss": float(ev.loss),
+               "lr": float(ev.hparams["lr"]), "dt_s": ev.dt,
+               "ntokens": ntok,
+               "tokens_per_s": (ntok / ev.dt) if ev.dt > 0 else 0.0}
+        if self._slot_tokens:
+            rec["padding_efficiency"] = ntok / self._slot_tokens
+        self.records.append(rec)
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+
+    def on_recover(self, ctx, restored_step: int) -> None:
+        self.records = [r for r in self.records
+                        if r["step"] < restored_step]
+        if self._fh is not None:
+            self._fh.close()
+        self._fh = open(self.path, "w")
+        for r in self.records:
+            self._fh.write(json.dumps(r) + "\n")
+        self._fh.flush()
+
+    def on_exit(self, ctx) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
 
 
 class EvalHook(Hook):

@@ -47,6 +47,18 @@ def _split_microbatches(batch, k: int):
     return jax.tree.map(split, batch)
 
 
+def _apply_loss_mask(batch):
+    """Packed-batch loss contract: slots where ``loss_mask`` is False
+    (padding, cross-segment label shifts) never reach the loss.  The
+    packer already emits -1 labels there; masking again at step entry
+    makes the contract hold for any injected batch iterator too."""
+    if not isinstance(batch, dict) or "loss_mask" not in batch:
+        return batch
+    batch = dict(batch)
+    batch["labels"] = jnp.where(batch["loss_mask"], batch["labels"], -1)
+    return batch
+
+
 @dataclasses.dataclass
 class StepProgram:
     """One compiled training step + everything needed to drive or lower it.
@@ -92,7 +104,8 @@ class StepProgram:
             lambda: self.arch.init_params(jax.random.PRNGKey(0)))
         opt_sds = jax.eval_shape(self.opt.init, params_sds)
         d = self.spec.data
-        batch_sds = self.arch.train_batch_specs(d.global_batch, d.seq_len)
+        batch_sds = self.arch.train_batch_specs(d.global_batch, d.seq_len,
+                                                packed=d.packing)
         hp_sds = jax.tree.map(
             lambda _: jax.ShapeDtypeStruct((), jnp.float32),
             self.hparams_fn(1))
@@ -125,6 +138,10 @@ def build_step_program(spec: RunSpec, arch=None, opt: Optional[Opt] = None,
     if arch is None:
         from repro.models.registry import get_arch
         arch = get_arch(spec.model.arch, smoke=spec.model.smoke)
+    if spec.data is not None and spec.data.packing:
+        # fail at build time, not trace time, for unsupported families
+        arch.train_batch_specs(spec.data.global_batch, spec.data.seq_len,
+                               packed=True)
     if opt is None:
         rule = opt_lib.get_rule(spec.opt.name, **spec.opt.kwargs)
         if groups is None:
@@ -152,6 +169,7 @@ def build_step_program(spec: RunSpec, arch=None, opt: Optional[Opt] = None,
             param_constraint=param_constraint)
 
         def one_step(params, opt_state, batch, hp):
+            batch = _apply_loss_mask(batch)
             return step_kw(params, opt_state, batch, hparams=hp)
 
         if k > 1:
@@ -179,6 +197,7 @@ def build_step_program(spec: RunSpec, arch=None, opt: Optional[Opt] = None,
         loss_fn = arch.make_loss_fn()
 
         def one_step(params, opt_state, batch, hp):
+            batch = _apply_loss_mask(batch)
             if k > 1:
                 mb = _split_microbatches(batch, k)
 

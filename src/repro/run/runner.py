@@ -8,8 +8,8 @@ scenarios without re-wiring the loop — the spec stays the single source
 of truth for what is *declarable*, the overrides carry what is not.
 
 Default hook order (measurement before side effects; see
-``repro.run.hooks``): straggler → heartbeat → history → logging → eval →
-checkpoint → user hooks.
+``repro.run.hooks``): straggler → heartbeat → history → logging →
+metrics → eval → checkpoint → user hooks.
 """
 from __future__ import annotations
 
@@ -91,6 +91,8 @@ def _default_hooks(spec: RunSpec, *, eval_iter, eval_factory, ckpt_manager,
     if spec.log_every and absent(hooks_lib.LoggingHook):
         out.append(hooks_lib.LoggingHook(spec.log_every, log_fn,
                                          total=spec.steps.total))
+    if spec.metrics_path and absent(hooks_lib.MetricsHook):
+        out.append(hooks_lib.MetricsHook(spec.metrics_path))
     if spec.eval.every and absent(hooks_lib.EvalHook):
         if eval_iter is not None:
             out.append(hooks_lib.EvalHook(eval_iter, spec.eval.every,

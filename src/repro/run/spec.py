@@ -161,6 +161,9 @@ class RunSpec:
     fault: FaultSpec = dataclasses.field(default_factory=FaultSpec)
     log_every: int = 10
     seed: int = 0
+    # JSONL metrics export (MetricsHook): step, loss, tokens/s, padding
+    # efficiency.  None = disabled.
+    metrics_path: Optional[str] = None
 
     def __post_init__(self):
         if (self.data is not None and self.steps.microbatches > 1
@@ -234,6 +237,13 @@ def add_cli_args(ap) -> None:
                     choices=["synthetic", "memmap"])
     ap.add_argument("--data-path", default=None,
                     help="packed .bin token file (--source memmap)")
+    ap.add_argument("--packing", action="store_true",
+                    help="segment-packed ragged batches (PackedBatch "
+                         "layout: segment ids, per-segment positions, "
+                         "loss mask)")
+    ap.add_argument("--metrics-path", default=None,
+                    help="JSONL metrics file (MetricsHook): step, loss, "
+                         "tokens/s, padding efficiency")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
@@ -258,7 +268,7 @@ def from_cli_args(args) -> RunSpec:
         # vocab=0 → resolved from the arch config by run()
         data=DataConfig(vocab=0, seq_len=args.seq, global_batch=args.batch,
                         seed=args.seed, source=args.source,
-                        path=args.data_path),
+                        path=args.data_path, packing=args.packing),
         opt=OptSpec(name=args.optimizer, lr=args.lr, schedule=args.schedule,
                     kwargs=kwargs, hparams=hparams),
         steps=StepSpec(total=args.steps, microbatches=args.microbatches,
@@ -269,4 +279,5 @@ def from_cli_args(args) -> RunSpec:
         eval=EvalSpec(every=args.eval_every),
         fault=FaultSpec(heartbeat_timeout_s=args.heartbeat_timeout),
         log_every=args.log_every,
-        seed=args.seed)
+        seed=args.seed,
+        metrics_path=args.metrics_path)

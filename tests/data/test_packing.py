@@ -1,0 +1,186 @@
+"""Segment packing: bucket boundaries, first-fit placement, the exactly-
+once token-conservation guarantee, layout invariants (positions restart,
+labels never cross segments, loss_mask), and the packed stream's
+stateless-given-step rewind contract.
+"""
+import numpy as np
+import pytest
+
+from repro.data.pipeline import (DataConfig, PackedBatch, SyntheticLM,
+                                 batches, bucket_boundaries, pack_documents,
+                                 padded_batch_from_docs)
+
+
+# ---------------------------------------------------------------------
+# bucket boundaries (t2t idiom)
+# ---------------------------------------------------------------------
+
+def test_bucket_boundaries_monotone_and_bounded():
+    bb = bucket_boundaries(512)
+    assert all(b2 > b1 for b1, b2 in zip(bb, bb[1:]))
+    assert bb[0] == 8 and bb[-1] < 512
+    # multiplicative growth: each boundary is max(x+1, int(1.1 x))
+    for b1, b2 in zip(bb, bb[1:]):
+        assert b2 == max(b1 + 1, int(b1 * 1.1))
+
+
+def test_bucket_boundaries_degenerate():
+    assert bucket_boundaries(8) == [8]
+    assert bucket_boundaries(4) == [4]
+
+
+# ---------------------------------------------------------------------
+# pack_documents
+# ---------------------------------------------------------------------
+
+def _docs(lengths, base=0):
+    """Documents with globally-unique tokens: doc i's slots are a
+    contiguous integer range, so conservation is checkable by value."""
+    out, off = [], base
+    for n in lengths:
+        out.append(np.arange(off, off + n + 1, dtype=np.int32))
+        off += n + 1
+    return out
+
+
+def test_tokens_conserved_exactly_once():
+    docs = _docs([12, 20, 9, 31, 5, 17])
+    pb, used = pack_documents(docs, n_rows=2, seq_len=48)
+    assert used == [0, 1, 2, 3, 4, 5]
+    got = sorted(pb.tokens[pb.segment_ids > 0].tolist())
+    want = sorted(t for d in docs for t in d[:-1].tolist())
+    assert got == want  # every input token placed exactly once
+    # pad slots are inert: label -1, loss_mask False
+    assert (pb.labels[pb.segment_ids == 0] == -1).all()
+    assert not pb.loss_mask[pb.segment_ids == 0].any()
+
+
+def test_layout_invariants_per_segment():
+    docs = _docs([12, 20, 9, 31, 5, 17])
+    pb, _ = pack_documents(docs, n_rows=2, seq_len=48)
+    for r in range(pb.tokens.shape[0]):
+        for s in range(1, pb.segment_ids[r].max() + 1):
+            sl = pb.segment_ids[r] == s
+            n = int(sl.sum())
+            # positions restart at 0 within every segment
+            assert pb.positions[r][sl].tolist() == list(range(n))
+            toks = pb.tokens[r][sl]
+            labs = pb.labels[r][sl]
+            # labels are the doc's own next tokens — the per-document
+            # shift happened before packing, so no label crosses into a
+            # neighbouring segment
+            assert (labs[:-1] == toks[1:]).all()
+            assert labs[-1] == toks[-1] + 1  # unique-range docs
+            assert pb.loss_mask[r][sl].all()
+
+
+def test_first_fit_overflows_to_next_row():
+    # 40 + 20 can't share a 48-slot row: first-fit must split them
+    docs = _docs([40, 20])
+    pb, used = pack_documents(docs, n_rows=2, seq_len=48)
+    assert used == [0, 1]
+    rows_used = {int(r) for r in range(2) if (pb.segment_ids[r] > 0).any()}
+    assert rows_used == {0, 1}
+    assert pb.segment_ids.max() == 1  # one doc per row here
+
+
+def test_nonfitting_docs_dropped_deterministically():
+    docs = _docs([40, 40, 40])  # only two rows of 48 slots
+    pb, used = pack_documents(docs, n_rows=2, seq_len=48)
+    assert len(used) == 2
+    pb2, used2 = pack_documents(docs, n_rows=2, seq_len=48)
+    assert used == used2
+    np.testing.assert_array_equal(pb.tokens, pb2.tokens)
+
+
+def test_pack_documents_raises():
+    with pytest.raises(ValueError, match="exceeds row seq_len"):
+        pack_documents(_docs([49]), n_rows=1, seq_len=48)
+    with pytest.raises(ValueError, match=">= 2 tokens"):
+        pack_documents([np.array([7], np.int32)], n_rows=1, seq_len=48)
+
+
+def test_padding_efficiency_property():
+    docs = _docs([30, 10])
+    pb, _ = pack_documents(docs, n_rows=1, seq_len=48)
+    assert pb.padding_efficiency == pytest.approx(40 / 48)
+
+
+# ---------------------------------------------------------------------
+# the packed stream
+# ---------------------------------------------------------------------
+
+def _cfg(**kw):
+    base = dict(vocab=128, seq_len=64, global_batch=4, packing=True)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_packed_batch_matches_train_specs():
+    from repro.models.registry import get_arch
+    arch = get_arch("h2o-danube-1.8b", smoke=True)
+    cfg = _cfg(vocab=arch.cfg.vocab)
+    b = SyntheticLM(cfg).packed_batch(0)
+    specs = arch.train_batch_specs(cfg.global_batch, cfg.seq_len,
+                                   packed=True)
+    assert set(b) == set(specs)
+    for k_, sds in specs.items():
+        assert b[k_].shape == sds.shape, k_
+        assert b[k_].dtype == sds.dtype, k_
+
+
+def test_packed_stream_stateless_given_step():
+    cfg = _cfg()
+    it0 = batches(cfg, 0)
+    for _ in range(2):
+        next(it0)
+    third = next(it0)
+    first = next(batches(cfg, 2))
+    for k_ in third:
+        np.testing.assert_array_equal(third[k_], first[k_])
+
+
+def test_packing_flag_dispatches_stream():
+    b_packed = next(batches(_cfg(), 0))
+    b_padded = next(batches(_cfg(packing=False), 0))
+    assert "segment_ids" in b_packed and "segment_ids" not in b_padded
+    assert set(b_padded) == {"tokens", "labels"}
+
+
+def test_packed_beats_padded_efficiency():
+    """The point of the layout: first-fit packing recovers most of the
+    padding tax a one-doc-per-row layout pays on ragged docs."""
+    cfg = _cfg()
+    src = SyntheticLM(cfg)
+    b = src.packed_batch(0)
+    packed_eff = (b["segment_ids"] > 0).mean()
+    docs = src.docs(0)[:cfg.global_batch]
+    pad = padded_batch_from_docs(docs, cfg.global_batch, cfg.seq_len)
+    padded_eff = (pad["labels"] >= 0).mean()
+    assert packed_eff > padded_eff
+    assert packed_eff > 0.85
+
+
+def test_padded_batch_from_docs_layout():
+    docs = _docs([12, 30])
+    b = padded_batch_from_docs(docs, n_rows=2, seq_len=48)
+    assert set(b) == {"tokens", "labels"}
+    assert b["tokens"].shape == (2, 48)
+    np.testing.assert_array_equal(b["tokens"][0][:12], docs[0][:-1])
+    np.testing.assert_array_equal(b["labels"][0][:12], docs[0][1:])
+    assert (b["labels"][0][12:] == -1).all()
+
+
+def test_memmap_corpus_packed(tmp_path):
+    from repro.data.pipeline import MemmapCorpus
+    data = np.arange(4096, dtype=np.int32) % 128
+    path = tmp_path / "corpus.bin"
+    data.tofile(path)
+    cfg = _cfg(path=str(path))
+    src = MemmapCorpus(cfg)
+    b = src.packed_batch(0)
+    assert b["tokens"].shape == (4, 64)
+    assert (b["segment_ids"] > 0).mean() > 0.5
+    # stateless too
+    b2 = src.packed_batch(0)
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])

@@ -1,0 +1,169 @@
+"""No-cross-segment attention: every kernel path (direct, blockwise,
+flash custom-VJP) against a per-document oracle, plus the bitwise
+zero-leakage identity — scrubbing every foreign segment's k/v must not
+change a single bit of the target segment's output.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+B, S, K, G, dh = 2, 48, 2, 2, 16
+H = K * G
+ROWS = [[12, 20, 16], [30, 10]]  # row 1 has an 8-slot padding tail
+
+
+def _meta():
+    seg = np.zeros((B, S), np.int32)
+    pos = np.zeros((B, S), np.int32)
+    for b, lens in enumerate(ROWS):
+        o = 0
+        for j, n in enumerate(lens):
+            seg[b, o:o + n] = j + 1
+            pos[b, o:o + n] = np.arange(n)
+            o += n
+    return jnp.asarray(seg), jnp.asarray(pos)
+
+
+@pytest.fixture(scope="module")
+def qkv():
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (B, S, H, dh), jnp.float32)
+    k = jax.random.normal(kk, (B, S, K, dh), jnp.float32)
+    v = jax.random.normal(kv, (B, S, K, dh), jnp.float32)
+    return q, k, v
+
+
+def _oracle(q, k, v, window=None):
+    """Per-document direct attention on sliced inputs — no packing."""
+    spec = L.MaskSpec(causal=True, window=window)
+    out = np.zeros((B, S, H, dh), np.float32)
+    for b, lens in enumerate(ROWS):
+        o = 0
+        for n in lens:
+            sl = slice(o, o + n)
+            po = jnp.arange(n)
+            r = L.attention(q[b:b + 1, sl], k[b:b + 1, sl], v[b:b + 1, sl],
+                            spec=spec, q_pos=po, kv_pos=po,
+                            force_direct=True)
+            out[b, sl] = np.asarray(r[0])
+            o += n
+    return out
+
+
+def _real_mask(seg):
+    return (np.asarray(seg) > 0)[..., None, None]
+
+
+@pytest.mark.parametrize("window", [None, 7])
+def test_direct_matches_per_document_oracle(qkv, window):
+    q, k, v = qkv
+    seg, pos = _meta()
+    spec = L.MaskSpec(causal=True, window=window, segmented=True)
+    o = L.attention(q, k, v, spec=spec, q_pos=pos, kv_pos=pos,
+                    q_seg=seg, kv_seg=seg, force_direct=True)
+    err = np.abs(np.asarray(o) - _oracle(q, k, v, window)) * _real_mask(seg)
+    assert err.max() < 2e-5
+
+
+def test_block_matches_per_document_oracle(qkv):
+    q, k, v = qkv
+    seg, pos = _meta()
+    spec = L.MaskSpec(causal=True, segmented=True)
+    o = L._block_attention(q.reshape(B, S, K, G, dh), k, v, pos, pos, spec,
+                           None, dh ** -0.5, q_block=16, kv_block=16,
+                           q_seg=seg, kv_seg=seg)
+    ob = np.asarray(o).reshape(B, S, H, dh)
+    err = np.abs(ob - _oracle(q, k, v)) * _real_mask(seg)
+    assert err.max() < 2e-5
+
+
+def test_direct_zero_leakage_is_bitwise(qkv):
+    """Replace every token outside segment 1 with junk k/v: the packed
+    layout's whole correctness claim is that segment 1's output is
+    *bitwise* unchanged (masked logits underflow to exact zeros in the
+    same-shape reduction)."""
+    q, k, v = qkv
+    seg, pos = _meta()
+    spec = L.MaskSpec(causal=True, segmented=True)
+
+    def att(k_, v_):
+        return L.attention(q, k_, v_, spec=spec, q_pos=pos, kv_pos=pos,
+                           q_seg=seg, kv_seg=seg, force_direct=True)
+
+    tgt = np.asarray(seg) == 1
+    keep = jnp.asarray(tgt)[..., None, None]
+    o_ref = att(k, v)
+    o_scrub = att(jnp.where(keep, k, 7.25), jnp.where(keep, v, -3.5))
+    np.testing.assert_array_equal(np.asarray(o_ref)[tgt],
+                                  np.asarray(o_scrub)[tgt])
+
+
+@pytest.mark.parametrize("tiles", [1, 2])
+def test_flash_vjp_matches_direct_segmented(qkv, tiles):
+    q, k, v = qkv
+    seg, pos = _meta()
+    spec = L.MaskSpec(causal=True, segmented=True)
+    qr = q.reshape(B, S, K, G, dh)
+    live = (seg > 0)[:, :, None, None, None]
+
+    def scalar(o):
+        o = o * live  # padded slots carry no gradient signal
+        return jnp.sum(o * jnp.cos(o))
+
+    def f_flash(q_):
+        return scalar(L._flash_attention(
+            q_, k, v, pos, pos, spec, None, dh ** -0.5, 16, 16,
+            tiles=tiles, q_seg=seg, kv_seg=seg))
+
+    def f_direct(q_):
+        o = L.attention(q_.reshape(B, S, H, dh), k, v, spec=spec,
+                        q_pos=pos, kv_pos=pos, q_seg=seg, kv_seg=seg,
+                        force_direct=True)
+        return scalar(o.reshape(B, S, K, G, dh))
+
+    vf, gf = jax.value_and_grad(f_flash)(qr)
+    vd, gd = jax.value_and_grad(f_direct)(qr)
+    np.testing.assert_allclose(float(vf), float(vd), rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(gf), np.asarray(gd),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flash_kv_grads_match_direct_segmented(qkv):
+    q, k, v = qkv
+    seg, pos = _meta()
+    spec = L.MaskSpec(causal=True, segmented=True)
+    qr = q.reshape(B, S, K, G, dh)
+    live = (seg > 0)[:, :, None, None, None]
+
+    def f_flash(kv_):
+        k_, v_ = kv_
+        o = L._flash_attention(qr, k_, v_, pos, pos, spec, None,
+                               dh ** -0.5, 16, 16, tiles=2,
+                               q_seg=seg, kv_seg=seg)
+        return jnp.sum((o * live) ** 2)
+
+    def f_direct(kv_):
+        k_, v_ = kv_
+        o = L.attention(q, k_, v_, spec=spec, q_pos=pos, kv_pos=pos,
+                        q_seg=seg, kv_seg=seg, force_direct=True)
+        return jnp.sum((o.reshape(B, S, K, G, dh) * live) ** 2)
+
+    gf = jax.grad(f_flash)((k, v))
+    gd = jax.grad(f_direct)((k, v))
+    for a, b in zip(jax.tree.leaves(gf), jax.tree.leaves(gd)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_maskspec_segmented_consistency_asserted(qkv):
+    q, k, v = qkv
+    seg, pos = _meta()
+    with pytest.raises(AssertionError, match="segmented"):
+        L.attention(q, k, v, spec=L.MaskSpec(causal=True), q_pos=pos,
+                    kv_pos=pos, q_seg=seg, kv_seg=seg)
+    with pytest.raises(AssertionError, match="segmented"):
+        L.attention(q, k, v, spec=L.MaskSpec(causal=True, segmented=True),
+                    q_pos=jnp.arange(S), kv_pos=jnp.arange(S))
