@@ -1,0 +1,56 @@
+"""Fleet sweep demo: one base RunSpec fanned across three optimizer
+variants, merged into the ranked report the sweep driver ships.
+
+This is the committed example of the ``repro.fleet.sweep`` artifact
+(DESIGN.md §"Elastic training fleet" documents the schema): three
+members — AdaLomo at two learning rates plus an AdamW ablation — run to
+completion on the tiny proxy model, and ``report.json`` merges their
+HistoryHook/MetricsHook outputs ranked by final loss.
+
+Writes ``benchmarks/BENCH_sweep.json`` (committed artifact; regenerate
+with ``PYTHONPATH=src python -m benchmarks.run --only fleet_sweep``).
+"""
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import LRS, fmt_row, tiny_llama, write_bench_json
+from repro.fleet import run_sweep
+from repro.run import ModelSpec, OptSpec, RunSpec, StepSpec
+from repro.data.pipeline import DataConfig
+
+VARIANTS = [
+    {"opt.lr": LRS["adalomo"]},
+    {"opt.lr": LRS["adalomo"] / 3},
+    {"opt.name": "adamw", "opt.lr": LRS["adamw"]},
+]
+
+
+def _base(arch, steps: int) -> RunSpec:
+    return RunSpec(
+        model=ModelSpec(arch=arch.arch_id),
+        data=DataConfig(vocab=arch.cfg.vocab, seq_len=128, global_batch=8),
+        opt=OptSpec(name="adalomo", schedule="cosine"),
+        steps=StepSpec(total=steps),
+        log_every=0)
+
+
+def run(fast: bool = True) -> list:
+    arch = tiny_llama()
+    steps = 12 if fast else 60
+    with tempfile.TemporaryDirectory() as d:
+        report = run_sweep(_base(arch, steps), VARIANTS, d,
+                           run_kwargs={"arch": arch},
+                           log_fn=lambda s: None)
+    # the committed artifact is the report itself, minus the base spec
+    # blob (redundant with the per-member overrides for review purposes)
+    slim = {k: v for k, v in report.items() if k != "base_spec"}
+    write_bench_json("sweep", {"arch": "tiny-llama", "steps": steps,
+                               "report": slim})
+    rows = []
+    for rank, name in enumerate(report["ranking"], 1):
+        row = next(r for r in report["members"] if r["name"] == name)
+        rows.append(fmt_row(f"fleet_sweep/{name}",
+                            row.get("mean_tokens_per_s", 0.0) or 0.0,
+                            f"rank{rank}_loss{row['final_loss']:.3f}"))
+    return rows

@@ -20,6 +20,8 @@ MODULES = [
     "roofline",             # §Roofline from the dry-run artifacts
     "serve_throughput",     # paged continuous batching vs static batching
     "packing_efficiency",   # segment packing: packed vs padded tokens/s
+    "step_time",            # step-time baseline on two config-zoo shapes
+    "fleet_sweep",          # sweep driver demo: 3-variant ranked report
 ]
 
 

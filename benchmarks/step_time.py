@@ -1,0 +1,78 @@
+"""Step-time baseline: wall time per fused AdaLomo train step on two
+config-zoo shapes (smoke sizes, CPU).
+
+The repo has convergence and memory baselines but — until this module —
+no committed *step-time* number, so a perf regression in the step (a new
+hook, a layout change, an optimizer edit) only showed up anecdotally.
+This is the reference point: per-arch compile time, median/mean step
+wall time and real-token throughput, measured through the stock
+``run()`` loop with the default hook pipeline (the number users actually
+get, not a hookless best case).
+
+Writes ``benchmarks/BENCH_step_time.json`` (committed artifact; regenerate
+with ``PYTHONPATH=src python -m benchmarks.run --only step_time``).
+"""
+from __future__ import annotations
+
+import statistics
+
+from benchmarks.common import fmt_row, write_bench_json
+from repro.data.pipeline import DataConfig
+from repro.models.registry import get_arch
+from repro.run import Hook, ModelSpec, OptSpec, RunSpec, StepSpec
+from repro.run import run as run_training
+
+ARCHS = ("h2o-danube-1.8b", "qwen3-32b")
+BATCH, SEQ = 8, 128
+
+
+class _Collect(Hook):
+    def __init__(self):
+        self.dts: list = []
+        self.ntoks: list = []
+
+    def on_step_end(self, ctx, ev) -> None:
+        self.dts.append(ev.dt)
+        self.ntoks.append(float(ev.metrics["ntokens"]))
+
+
+def _spec(arch, steps: int) -> RunSpec:
+    return RunSpec(
+        model=ModelSpec(arch=arch.arch_id, smoke=True),
+        data=DataConfig(vocab=arch.cfg.vocab, seq_len=SEQ,
+                        global_batch=BATCH),
+        opt=OptSpec(name="adalomo", schedule="constant"),
+        steps=StepSpec(total=steps, fused=True),
+        log_every=0)
+
+
+def _measure(arch_id: str, steps: int) -> dict:
+    arch = get_arch(arch_id, smoke=True)
+    col = _Collect()
+    res = run_training(_spec(arch, steps), arch=arch, hooks=(col,),
+                       log_fn=lambda s: None)
+    warm = col.dts[1:]                      # step 0 = compile + run
+    return {
+        "compile_s": round(col.dts[0], 3),
+        "median_step_ms": round(statistics.median(warm) * 1e3, 2),
+        "mean_step_ms": round(statistics.mean(warm) * 1e3, 2),
+        "tokens_per_s": round(sum(col.ntoks[1:]) / sum(warm), 1),
+        "steps_measured": len(warm),
+        "cache_size": res.program.cache_size(),   # must stay 1
+    }
+
+
+def run(fast: bool = True) -> list:
+    steps = 8 if fast else 32
+    cells, rows = {}, []
+    for arch_id in ARCHS:
+        cell = _measure(arch_id, steps)
+        cells[arch_id] = cell
+        rows.append(fmt_row(f"step_time/{arch_id}",
+                            cell["median_step_ms"] * 1e3,
+                            f"{cell['tokens_per_s']}tok/s"))
+    write_bench_json("step_time", {
+        "batch": BATCH, "seq": SEQ, "optimizer": "adalomo",
+        "fused": True, "cells": cells,
+    })
+    return rows

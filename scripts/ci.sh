@@ -6,12 +6,25 @@
 #
 #   scripts/ci.sh            # full tier-1 (includes -m slow tests)
 #   FAST=1 scripts/ci.sh     # quick signal: skip the slow marker
+#   FLEET=1 scripts/ci.sh    # fleet tier only: sweep smoke, preemption
+#                            # signal path, elastic virtual-device tests
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 TIMEOUT_S="${TIMEOUT_S:-1500}"
 ARGS=(-x -q)
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${FLEET:-0}" == "1" ]]; then
+  # Fleet tier: the elastic-training acceptance surface in one bounded
+  # command — the sweep driver (incl. the crash-mid-sweep resume proof),
+  # the SIGTERM→checkpoint→exit-75→elastic-resume protocol, the chaos
+  # bitwise-recovery harness, and the multi-virtual-device elastic
+  # restore subprocess tests.  All slow-marked tests here fit the same
+  # TIMEOUT_S budget as the full tier.
+  exec timeout "$TIMEOUT_S" python -m pytest tests/fleet \
+      tests/run/test_profiler.py -q "$@"
+fi
 
 if [[ "${FAST:-0}" == "1" ]]; then
   # Fast tier leads with the contract guards: the Opt v2 zero-recompile-

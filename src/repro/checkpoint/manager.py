@@ -130,6 +130,32 @@ class CheckpointManager:
         steps = self._complete_steps()
         return max(steps) if steps else None
 
+    # ---------------- preemption marker ----------------
+    # The fleet layer's resumable-exit protocol (repro.fleet.preempt): a
+    # preempted run checkpoints at the next step boundary and leaves this
+    # marker so launchers/sweep drivers can tell "stopped, resume me"
+    # (exit PREEMPTED_EXIT_CODE) from "finished" or "crashed".  The
+    # marker is consumed (cleared) by the run that resumes it.
+    PREEMPT_MARKER = "_PREEMPTED.json"
+
+    def write_preempt_marker(self, step: int, **info) -> Path:
+        marker = self.dir / self.PREEMPT_MARKER
+        tmp = self.dir / (self.PREEMPT_MARKER + ".tmp")
+        tmp.write_text(json.dumps({"step": step, "resumable": True, **info}))
+        tmp.rename(marker)     # atomic: readers never see a partial marker
+        return marker
+
+    def read_preempt_marker(self) -> Optional[dict]:
+        marker = self.dir / self.PREEMPT_MARKER
+        if not marker.exists():
+            return None
+        return json.loads(marker.read_text())
+
+    def clear_preempt_marker(self) -> None:
+        marker = self.dir / self.PREEMPT_MARKER
+        if marker.exists():
+            marker.unlink()
+
     def restore(self, step: Optional[int] = None, *,
                 template: Any = None, shardings: Any = None
                 ) -> tuple[int, Any, dict]:

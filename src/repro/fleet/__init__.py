@@ -1,0 +1,34 @@
+"""Elastic training fleet: the resilience layer over the Run API.
+
+Single-shot ``run(spec)`` plus mesh-independent checkpoints already
+contain every primitive a preemptible fleet needs; this package is the
+layer that uses them (DESIGN.md §"Elastic training fleet"):
+
+  * ``elastic``  — resume the same RunSpec on a different device mesh
+                   (``MeshSpec.shape``); factored AdaLomo state reshards
+                   losslessly;
+  * ``preempt``  — SIGTERM/SIGINT → boundary checkpoint → resumable
+                   marker → exit :data:`PREEMPTED_EXIT_CODE`;
+  * ``chaos``    — fault injection: kill/resume cycles that must stay
+                   bitwise-equal to the uninterrupted run;
+  * ``sweep``    — fan a base RunSpec across declarative overrides into
+                   crash-isolated, individually resumable members with
+                   one merged, ranked report (``launch/sweep.py`` CLI).
+"""
+from repro.fleet.chaos import ChaosReport, KillAtHook, SimulatedKill, \
+    chaos_run
+from repro.fleet.elastic import ElasticCheckpoints, mesh_from_spec, \
+    program_shardings, run_elastic
+from repro.fleet.preempt import PREEMPTED_EXIT_CODE, Preempted, \
+    PreemptionHook
+from repro.fleet.sweep import SweepMember, apply_overrides, build_report, \
+    expand_grid, materialize, member_name, run_sweep
+
+__all__ = [
+    "mesh_from_spec", "program_shardings", "run_elastic",
+    "ElasticCheckpoints",
+    "Preempted", "PreemptionHook", "PREEMPTED_EXIT_CODE",
+    "SimulatedKill", "KillAtHook", "chaos_run", "ChaosReport",
+    "expand_grid", "apply_overrides", "materialize", "member_name",
+    "SweepMember", "run_sweep", "build_report",
+]

@@ -57,6 +57,11 @@ def main(argv=None):
     add_cli_args(ap)
     ap.add_argument("--spec", default=None,
                     help="RunSpec JSON file (overrides the other flags)")
+    ap.add_argument("--elastic-from", default=None, metavar="CKPT_DIR",
+                    help="resume this run from an existing checkpoint dir "
+                         "onto the CURRENT mesh (combine with --mesh-shape "
+                         "to restore onto a different device count after "
+                         "pod loss/growth)")
     ap.add_argument("--virtual-devices", type=int, default=None,
                     help="host-platform device count (handled pre-import)")
     ap.add_argument("--history-out", default=None,
@@ -68,6 +73,26 @@ def main(argv=None):
             spec = RunSpec.from_json(f.read())
     else:
         spec = from_cli_args(args)
+
+    if args.elastic_from:
+        # Elastic restore: take the recorded spec as-is, point it at the
+        # existing checkpoints, and (optionally) override the mesh shape
+        # — CheckpointManager.restore(shardings=...) re-shards the state,
+        # including AdaLomo's factored moments, onto the new mesh.
+        import dataclasses
+
+        from repro.run.spec import MeshSpec, parse_mesh_shape
+        mesh = spec.mesh
+        shape = parse_mesh_shape(getattr(args, "mesh_shape", None))
+        if shape:
+            mesh = MeshSpec(kind="multi", optimized=mesh.optimized,
+                            shape=shape)
+        spec = dataclasses.replace(
+            spec,
+            mesh=mesh,
+            checkpoint=dataclasses.replace(
+                spec.checkpoint, dir=args.elastic_from, resume=True,
+                gc_incomplete=True))
 
     if args.virtual_devices:
         # The XLA flag only takes effect when set before jax initializes —
@@ -81,9 +106,17 @@ def main(argv=None):
                 "be processed before jax initializes — invoke via "
                 "`python -m repro.launch.train` on the command line")
 
+    from repro.fleet.preempt import PREEMPTED_EXIT_CODE, Preempted
     from repro.run import run
 
-    result = run(spec)
+    try:
+        result = run(spec)
+    except Preempted as e:
+        # Resumable by re-invoking with --resume / --elastic-from (the
+        # sweep driver keys on this exit code).
+        print(f"preempted: checkpointed at step {e.step}; exiting "
+              f"{PREEMPTED_EXIT_CODE} (resumable)")
+        raise SystemExit(PREEMPTED_EXIT_CODE)
     if args.history_out:
         with open(args.history_out, "w") as f:
             json.dump(result.history, f)

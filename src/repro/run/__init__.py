@@ -12,19 +12,21 @@ pipeline: one entrypoint for train / dryrun / benchmarks (DESIGN.md
 """
 from repro.run.hooks import (CheckpointHook, EvalHook, HeartbeatHook,
                              HistoryHook, Hook, LoggingHook, MetricsHook,
-                             StepEvent, StragglerHook, TimingHook)
+                             ProfilerHook, StepEvent, StragglerHook,
+                             TimingHook, find_metrics_hook)
 from repro.run.program import StepProgram, build_step_program
 from repro.run.runner import RunContext, RunResult, run
 from repro.run.spec import (DEFAULT_LRS, CheckpointSpec, EvalSpec,
                             FaultSpec, MeshSpec, ModelSpec, OptSpec,
-                            RunSpec, StepSpec)
+                            ProfileSpec, RunSpec, StepSpec)
 
 __all__ = [
     "RunSpec", "ModelSpec", "OptSpec", "StepSpec", "MeshSpec",
-    "CheckpointSpec", "EvalSpec", "FaultSpec", "DEFAULT_LRS",
+    "CheckpointSpec", "EvalSpec", "FaultSpec", "ProfileSpec",
+    "DEFAULT_LRS",
     "StepProgram", "build_step_program",
     "Hook", "StepEvent", "HistoryHook", "LoggingHook", "MetricsHook",
     "EvalHook", "CheckpointHook", "HeartbeatHook", "StragglerHook",
-    "TimingHook",
+    "TimingHook", "ProfilerHook", "find_metrics_hook",
     "run", "RunResult", "RunContext",
 ]

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 import time
 from pathlib import Path
 from typing import Any, Callable, Optional
@@ -134,7 +135,18 @@ class MetricsHook(Hook):
     being lost.  Honors the rewind contract like :class:`HistoryHook`:
     ``on_recover`` drops records at/after the restored step and rewrites
     the file, so the JSONL always reads as the uninterrupted run's
-    record."""
+    record.  The same contract extends across *process* restarts: a
+    resumed run (``ctx.start_step > 0``) fast-forwards by keeping the
+    existing records before the restored step and truncating the
+    re-executed tail, so one metrics file carries the whole fleet-level
+    history of a preempted-and-resumed run.
+
+    Besides per-step records, the stream carries *event* records
+    (``{"event": kind, "step": N, ...}``) from the liveness hooks —
+    heartbeat stalls and straggler steps annotate themselves here via
+    :meth:`annotate` (thread-safe; the heartbeat watchdog fires from its
+    own thread), so one JSONL file is the single record of throughput
+    *and* liveness."""
 
     def __init__(self, path, every: int = 1):
         self.path = str(path)
@@ -142,15 +154,47 @@ class MetricsHook(Hook):
         self.records: list = []
         self._slot_tokens: Optional[int] = None
         self._fh = None
+        self._lock = threading.Lock()
+
+    def _rewrite(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+        self._fh = open(self.path, "w")
+        for r in self.records:
+            self._fh.write(json.dumps(r) + "\n")
+        self._fh.flush()
 
     def on_run_start(self, ctx) -> None:
         d = ctx.spec.data
         if d is not None:
             self._slot_tokens = d.global_batch * d.seq_len
-        parent = Path(self.path).parent
+        p = Path(self.path)
+        parent = p.parent
         if str(parent) not in ("", "."):
             parent.mkdir(parents=True, exist_ok=True)
-        self._fh = open(self.path, "w")
+        with self._lock:
+            self.records = []
+            if ctx.start_step > 0 and p.exists():
+                # cross-process resume: keep the pre-restore record,
+                # truncate the tail the resumed run re-executes
+                for line in p.read_text().splitlines():
+                    try:
+                        r = json.loads(line)
+                    except ValueError:  # crash-truncated last line
+                        continue
+                    if r.get("step", ctx.start_step) < ctx.start_step:
+                        self.records.append(r)
+            self._rewrite()
+
+    def annotate(self, kind: str, step: int, **payload) -> None:
+        """Append an event record (liveness signals: heartbeat stalls,
+        straggler steps, preemption) to the JSONL stream."""
+        rec = {"event": kind, "step": int(step), **payload}
+        with self._lock:
+            self.records.append(rec)
+            if self._fh is not None:
+                self._fh.write(json.dumps(rec) + "\n")
+                self._fh.flush()
 
     def on_step_end(self, ctx, ev: StepEvent) -> None:
         if ev.step % self.every:
@@ -162,25 +206,32 @@ class MetricsHook(Hook):
                "tokens_per_s": (ntok / ev.dt) if ev.dt > 0 else 0.0}
         if self._slot_tokens:
             rec["padding_efficiency"] = ntok / self._slot_tokens
-        self.records.append(rec)
-        if self._fh is not None:
-            self._fh.write(json.dumps(rec) + "\n")
-            self._fh.flush()
+        with self._lock:
+            self.records.append(rec)
+            if self._fh is not None:
+                self._fh.write(json.dumps(rec) + "\n")
+                self._fh.flush()
 
     def on_recover(self, ctx, restored_step: int) -> None:
-        self.records = [r for r in self.records
-                        if r["step"] < restored_step]
-        if self._fh is not None:
-            self._fh.close()
-        self._fh = open(self.path, "w")
-        for r in self.records:
-            self._fh.write(json.dumps(r) + "\n")
-        self._fh.flush()
+        with self._lock:
+            self.records = [r for r in self.records
+                            if r["step"] < restored_step]
+            self._rewrite()
 
     def on_exit(self, ctx) -> None:
-        if self._fh is not None:
-            self._fh.close()
-            self._fh = None
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+
+def find_metrics_hook(hooks) -> Optional["MetricsHook"]:
+    """The pipeline's MetricsHook, if any (liveness hooks route their
+    signals into its JSONL stream)."""
+    for h in hooks:
+        if isinstance(h, MetricsHook):
+            return h
+    return None
 
 
 class EvalHook(Hook):
@@ -253,20 +304,37 @@ class CheckpointHook(Hook):
 
 
 class HeartbeatHook(Hook):
-    """Watchdog: marks the run wedged if steps stop completing."""
+    """Watchdog: marks the run wedged if steps stop completing.  A stall
+    is annotated into the MetricsHook JSONL stream (``{"event":
+    "heartbeat_stall", ...}``) when the pipeline has one, so the metrics
+    file carries liveness alongside throughput."""
 
     def __init__(self, timeout_s: float,
                  on_stall: Optional[Callable[[], None]] = None):
         self.timeout_s = timeout_s
         self._on_stall = on_stall
         self.heartbeat: Optional[Heartbeat] = None
+        self._last_step = 0
 
     def on_run_start(self, ctx) -> None:
-        on_stall = self._on_stall or (lambda: ctx.log("HEARTBEAT STALL"))
-        self.heartbeat = Heartbeat(self.timeout_s, on_stall=on_stall)
+        self._last_step = ctx.start_step
+        metrics = find_metrics_hook(ctx.hooks)
+
+        def fire():
+            # annotate runs from the watchdog thread — MetricsHook locks
+            if metrics is not None:
+                metrics.annotate("heartbeat_stall", self._last_step,
+                                 timeout_s=self.timeout_s)
+            if self._on_stall is not None:
+                self._on_stall()
+            else:
+                ctx.log("HEARTBEAT STALL")
+
+        self.heartbeat = Heartbeat(self.timeout_s, on_stall=fire)
         self.heartbeat.start()
 
     def on_step_end(self, ctx, ev: StepEvent) -> None:
+        self._last_step = ev.step
         if self.heartbeat is not None:
             self.heartbeat.beat()
 
@@ -277,13 +345,19 @@ class HeartbeatHook(Hook):
 
 class StragglerHook(Hook):
     """Feeds per-step wall time into a :class:`StragglerMonitor` (EMA
-    outlier detection; the coordinator's evict signal at scale)."""
+    outlier detection; the coordinator's evict signal at scale).
+    Flagged steps are annotated into the MetricsHook JSONL stream
+    (``{"event": "straggler", ...}``) when the pipeline has one."""
 
     def __init__(self, monitor: Optional[StragglerMonitor] = None):
         self.monitor = monitor if monitor is not None else StragglerMonitor()
 
     def on_step_end(self, ctx, ev: StepEvent) -> None:
-        self.monitor.observe(ev.step, ev.dt)
+        if self.monitor.observe(ev.step, ev.dt):
+            metrics = find_metrics_hook(ctx.hooks)
+            if metrics is not None:
+                _, dt, ema = self.monitor.events[-1]
+                metrics.annotate("straggler", ev.step, dt_s=dt, ema_s=ema)
 
 
 class TimingHook(Hook):
@@ -307,3 +381,69 @@ class TimingHook(Hook):
     @property
     def us_per_step(self) -> float:
         return self.wall_s / max(self.n_steps, 1) * 1e6
+
+
+class ProfilerHook(Hook):
+    """jax profiler trace for a configurable step window.
+
+    Traces steps ``[start, start + steps)`` (0-based) into ``dir`` and
+    stamps the artifact with the originating RunSpec
+    (``<dir>/profile.runspec.json`` sidecar, the dryrun-artifact idiom) so
+    a trace is always attributable to the exact spec that produced it.
+    The default window skips step 0, which is dominated by compilation.
+
+    Resume/recovery contract: a run restored *past* the window does not
+    re-trace (the artifact belongs to the steps that already executed);
+    a fault recovery while tracing stops the trace and keeps what was
+    captured.  ``on_exit`` stops a still-active trace on any exit path,
+    so a preempted run leaves a readable artifact."""
+
+    def __init__(self, dir, start: int = 1, steps: int = 2):
+        self.dir = str(dir)
+        self.start = int(start)
+        self.steps = int(steps)
+        self.active = False
+        self.done = False
+
+    def _begin(self, ctx) -> None:
+        try:
+            import jax.profiler
+            jax.profiler.start_trace(self.dir)
+            self.active = True
+        except Exception as e:  # profiler backend unavailable: degrade
+            ctx.log(f"profiler disabled: {type(e).__name__}: {e}")
+            self.done = True
+
+    def _end(self, ctx) -> None:
+        if not self.active:
+            return
+        try:
+            import jax.profiler
+            jax.profiler.stop_trace()
+        except Exception as e:
+            ctx.log(f"profiler stop failed: {type(e).__name__}: {e}")
+        self.active = False
+        self.done = True
+
+    def on_run_start(self, ctx) -> None:
+        out = Path(self.dir)
+        out.mkdir(parents=True, exist_ok=True)
+        (out / "profile.runspec.json").write_text(ctx.spec.to_json(indent=1))
+        if ctx.start_step > self.start:
+            self.done = True       # window already executed pre-resume
+        elif ctx.start_step == self.start:
+            self._begin(ctx)
+
+    def on_step_end(self, ctx, ev: StepEvent) -> None:
+        if self.done:
+            return
+        if self.active and ev.step + 1 >= self.start + self.steps:
+            self._end(ctx)
+        elif not self.active and ev.step + 1 == self.start:
+            self._begin(ctx)
+
+    def on_recover(self, ctx, restored_step: int) -> None:
+        self._end(ctx)
+
+    def on_exit(self, ctx) -> None:
+        self._end(ctx)

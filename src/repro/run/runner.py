@@ -8,8 +8,13 @@ scenarios without re-wiring the loop — the spec stays the single source
 of truth for what is *declarable*, the overrides carry what is not.
 
 Default hook order (measurement before side effects; see
-``repro.run.hooks``): straggler → heartbeat → history → logging →
-metrics → eval → checkpoint → user hooks.
+``repro.run.hooks``): straggler → heartbeat → profiler → history →
+logging → metrics → eval → checkpoint → preemption → user hooks.
+
+When ``spec.mesh.shape`` names a concrete device mesh, the loop runs the
+*same* step program sharded on it (``repro.fleet.elastic``): checkpoint
+restore re-shards onto the mesh, so a run resumes elastically on a
+smaller or larger fleet by editing only that field.
 """
 from __future__ import annotations
 
@@ -86,6 +91,10 @@ def _default_hooks(spec: RunSpec, *, eval_iter, eval_factory, ckpt_manager,
         out.append(hooks_lib.StragglerHook())
     if spec.fault.heartbeat_timeout_s > 0 and absent(hooks_lib.HeartbeatHook):
         out.append(hooks_lib.HeartbeatHook(spec.fault.heartbeat_timeout_s))
+    if spec.profile.dir and absent(hooks_lib.ProfilerHook):
+        out.append(hooks_lib.ProfilerHook(spec.profile.dir,
+                                          start=spec.profile.start,
+                                          steps=spec.profile.steps))
     if absent(hooks_lib.HistoryHook):
         out.append(hooks_lib.HistoryHook())
     if spec.log_every and absent(hooks_lib.LoggingHook):
@@ -105,6 +114,13 @@ def _default_hooks(spec: RunSpec, *, eval_iter, eval_factory, ckpt_manager,
             and absent(hooks_lib.CheckpointHook)):
         out.append(hooks_lib.CheckpointHook(ckpt_manager,
                                             spec.checkpoint.every))
+    if spec.fault.preempt and ckpt_manager is not None:
+        # after CheckpointHook: a preemption boundary that coincides with
+        # a scheduled save reuses it.  Lazy import — the fleet layer
+        # builds on repro.run, not the other way around.
+        from repro.fleet.preempt import PreemptionHook
+        if absent(PreemptionHook):
+            out.append(PreemptionHook(ckpt_manager))
     return tuple(out) + user
 
 
@@ -129,6 +145,16 @@ def run(spec: RunSpec, *, arch=None, program: Optional[StepProgram] = None,
     ``start_step`` begin mid-schedule without a checkpoint.
     """
     if program is None:
+        if spec.mesh.shape is not None:
+            # Elastic path: same spec, sharded step.  run_elastic builds
+            # the sharded program and re-enters run() with it, so this
+            # cannot recurse.
+            from repro.fleet.elastic import run_elastic
+            return run_elastic(spec, arch=arch, hooks=hooks, params=params,
+                               opt_state=opt_state, batch_iter=batch_iter,
+                               eval_iter=eval_iter, ckpt_manager=ckpt_manager,
+                               start_step=start_step, groups=groups,
+                               log_fn=log_fn)
         program = build_step_program(spec, arch, groups=groups)
     arch = program.arch
 
@@ -137,13 +163,14 @@ def run(spec: RunSpec, *, arch=None, program: Optional[StepProgram] = None,
     elif opt_state is None:
         opt_state = program.opt.init(params)
 
-    if spec.mesh.kind != "none":
-        # Mesh execution inside run() is the elastic-restore follow-up
-        # (ROADMAP); dryrun consumes MeshSpec itself.  Say so rather than
-        # silently dropping a declared sharding mode on spec replay.
+    if spec.mesh.kind != "none" and spec.mesh.shape is None:
+        # A sharding *mode* without a concrete shape is only consumed by
+        # dry-run lowering.  Say so rather than silently dropping a
+        # declared mode on spec replay (set mesh.shape for elastic
+        # execution inside run()).
         log_fn(f"note: spec.mesh.kind={spec.mesh.kind!r} is recorded but "
                "run() executes single-process; use launch/dryrun.py for "
-               "mesh lowering")
+               "mesh lowering or set mesh.shape for elastic execution")
 
     ck = spec.checkpoint
     if ckpt_manager is None and ck.dir:

@@ -112,14 +112,54 @@ class MeshSpec:
 
     ``optimized=False`` is the paper-faithful baseline: no activation
     sharding policy, no gradient reduce-scatter constraint.
+
+    ``shape`` is the *elastic* knob: a concrete device-mesh shape
+    (1-D = data only, 2-D = (data, model), 3-D = (pod, data, model)).
+    When set, ``run()`` executes the step sharded on that mesh
+    (``repro.fleet.elastic``), and checkpoint restore re-shards onto it —
+    the same RunSpec resumes on a smaller/larger mesh by changing only
+    this field.  ``None`` keeps the single-process path.
     """
 
     kind: str = "none"             # "none" | "single" | "multi"
     optimized: bool = True
+    shape: Optional[tuple] = None  # e.g. (4, 2) = 4-way data x 2-way model
 
     def __post_init__(self):
         if self.kind not in MESH_KINDS:
             raise ValueError(f"mesh kind {self.kind!r} not in {MESH_KINDS}")
+        if self.shape is not None:
+            shape = tuple(int(n) for n in self.shape)
+            if not shape or len(shape) > 3 or any(n < 1 for n in shape):
+                raise ValueError(
+                    f"mesh shape must be 1-3 positive ints, got {self.shape}")
+            # normalize (JSON round-trips lists) so specs compare equal
+            object.__setattr__(self, "shape", shape)
+
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape or ():
+            n *= s
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileSpec:
+    """jax profiler trace for a step window (ProfilerHook).
+
+    ``dir=None`` disables.  The trace covers steps ``[start, start+steps)``
+    (0-based); the artifact directory gets a ``profile.runspec.json``
+    sidecar stamping which RunSpec produced it.
+    """
+
+    dir: Optional[str] = None
+    start: int = 1                 # skip step 0 (compile)
+    steps: int = 2
+
+    def __post_init__(self):
+        if self.start < 0 or self.steps < 1:
+            raise ValueError(
+                f"profile window start={self.start} steps={self.steps}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,6 +184,11 @@ class FaultSpec:
     # complete checkpoint and rewinds the data stream (donated step
     # buffers make blind re-invocation impossible — see run()).
     retries: int = 2
+    # Preemption safety (repro.fleet.preempt): catch SIGTERM/SIGINT,
+    # checkpoint at the next step boundary, write a resumable marker and
+    # raise Preempted (launchers exit PREEMPTED_EXIT_CODE).  Only active
+    # when the run has a checkpoint manager and owns the main thread.
+    preempt: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,6 +204,7 @@ class RunSpec:
         default_factory=CheckpointSpec)
     eval: EvalSpec = dataclasses.field(default_factory=EvalSpec)
     fault: FaultSpec = dataclasses.field(default_factory=FaultSpec)
+    profile: ProfileSpec = dataclasses.field(default_factory=ProfileSpec)
     log_every: int = 10
     seed: int = 0
     # JSONL metrics export (MetricsHook): step, loss, tokens/s, padding
@@ -195,6 +241,7 @@ class RunSpec:
         sub("checkpoint", CheckpointSpec)
         sub("eval", EvalSpec)
         sub("fault", FaultSpec)
+        sub("profile", ProfileSpec)
         return cls(**d)
 
     @classmethod
@@ -244,6 +291,20 @@ def add_cli_args(ap) -> None:
     ap.add_argument("--metrics-path", default=None,
                     help="JSONL metrics file (MetricsHook): step, loss, "
                          "tokens/s, padding efficiency")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="elastic device-mesh shape, e.g. 4x2 = 4-way data "
+                         "x 2-way model (runs the step sharded; checkpoint "
+                         "restore re-shards onto it)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="jax profiler trace output dir (ProfilerHook)")
+    ap.add_argument("--profile-start", type=int, default=1,
+                    help="first profiled step (0-based; default skips the "
+                         "compile step)")
+    ap.add_argument("--profile-steps", type=int, default=2,
+                    help="number of steps in the trace window")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable the SIGTERM/SIGINT "
+                         "checkpoint-and-exit-resumable handler")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
@@ -255,6 +316,20 @@ def add_cli_args(ap) -> None:
     ap.add_argument("--seed", type=int, default=0)
 
 
+def parse_mesh_shape(text: Optional[str]) -> Optional[tuple]:
+    """``"4x2"`` / ``"4,2"`` → ``(4, 2)`` with a clear CLI error."""
+    if not text:
+        return None
+    try:
+        shape = tuple(int(p) for p in text.replace(",", "x").split("x") if p)
+        if not shape or any(n < 1 for n in shape):
+            raise ValueError
+    except ValueError:
+        raise SystemExit(
+            f"--mesh-shape: expected e.g. 4x2 or 2x2x2, got {text!r}")
+    return shape
+
+
 def from_cli_args(args) -> RunSpec:
     """Build a RunSpec from parsed :func:`add_cli_args` flags."""
     if not args.arch:
@@ -263,6 +338,7 @@ def from_cli_args(args) -> RunSpec:
                else {"weight_decay": args.weight_decay})
     kwargs = ({} if args.opt_backend is None
               else {"backend": args.opt_backend})
+    mesh_shape = parse_mesh_shape(args.mesh_shape)
     return RunSpec(
         model=ModelSpec(arch=args.arch, smoke=args.smoke),
         # vocab=0 → resolved from the arch config by run()
@@ -273,11 +349,16 @@ def from_cli_args(args) -> RunSpec:
                     kwargs=kwargs, hparams=hparams),
         steps=StepSpec(total=args.steps, microbatches=args.microbatches,
                        fused=(False if args.unfused else None)),
+        mesh=(MeshSpec(kind="multi", shape=mesh_shape)
+              if mesh_shape else MeshSpec()),
         checkpoint=CheckpointSpec(dir=args.ckpt_dir, every=args.ckpt_every,
                                   resume=args.resume,
                                   gc_incomplete=args.gc_incomplete),
         eval=EvalSpec(every=args.eval_every),
-        fault=FaultSpec(heartbeat_timeout_s=args.heartbeat_timeout),
+        fault=FaultSpec(heartbeat_timeout_s=args.heartbeat_timeout,
+                        preempt=not args.no_preempt),
+        profile=ProfileSpec(dir=args.profile_dir, start=args.profile_start,
+                            steps=args.profile_steps),
         log_every=args.log_every,
         seed=args.seed,
         metrics_path=args.metrics_path)

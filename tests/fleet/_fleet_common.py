@@ -1,0 +1,19 @@
+"""Shared spec factory for the fleet tests (smoke model, tiny batches)."""
+from repro.data.pipeline import DataConfig
+from repro.run import (CheckpointSpec, ModelSpec, OptSpec, RunSpec,
+                       StepSpec)
+
+
+def fleet_spec(ckpt_dir=None, *, total=6, every=3, metrics_path=None, **kw):
+    base = dict(
+        model=ModelSpec(arch="h2o-danube-1.8b", smoke=True),
+        data=DataConfig(vocab=0, seq_len=32, global_batch=8),
+        opt=OptSpec(name="adalomo", lr=1e-3, schedule="constant"),
+        steps=StepSpec(total=total),
+        metrics_path=metrics_path,
+        log_every=0)
+    if ckpt_dir is not None:
+        base["checkpoint"] = CheckpointSpec(dir=str(ckpt_dir), every=every,
+                                            resume=True)
+    base.update(kw)
+    return RunSpec(**base)

@@ -1,0 +1,73 @@
+"""Fault-injection harness: kill/resume cycles must reproduce the
+uninterrupted run bitwise (the rewind contract, end to end)."""
+import json
+
+import numpy as np
+import pytest
+
+from _fleet_common import fleet_spec
+from repro.fleet import ChaosReport, KillAtHook, SimulatedKill, chaos_run
+from repro.run import run
+
+
+def test_simulated_kill_is_uncatchable_by_recovery():
+    # BaseException: neither the runner's transient-failure recovery nor
+    # the sweep's crash isolation (`except Exception`) can swallow it —
+    # it behaves like a process death.
+    assert issubclass(SimulatedKill, BaseException)
+    assert not issubclass(SimulatedKill, Exception)
+
+
+def test_chaos_requires_checkpointing():
+    with pytest.raises(ValueError):
+        chaos_run(fleet_spec(), kill_at=[2])
+
+
+@pytest.mark.slow
+def test_kill_resume_cycles_are_bitwise(tmp_path):
+    clean = run(fleet_spec(tmp_path / "clean"), log_fn=lambda s: None)
+    full = np.asarray(clean.history["loss"])
+
+    # two kills — one before the first checkpoint (resume from scratch),
+    # one after — plus a wrecked last save (crash mid-write): recovery
+    # must fall back to the previous complete checkpoint and still
+    # converge to the identical curve.
+    rep = chaos_run(fleet_spec(tmp_path / "c",
+                               metrics_path=str(tmp_path / "c.jsonl")),
+                    kill_at=[2, 5], wreck_last_save=True,
+                    log_fn=lambda s: None)
+    assert isinstance(rep, ChaosReport)
+    assert [k[0] for k in rep.kills] == [2, 5]
+    assert all(r < k for k, r in rep.kills)   # resumed strictly earlier
+
+    # the final run's own tail is bitwise
+    tail = np.asarray(rep.result.history["loss"])
+    np.testing.assert_array_equal(tail, full[rep.result.start_step:])
+
+    # the merged metrics stream (rewritten across every resume) is the
+    # full uninterrupted curve, bitwise
+    recs = [json.loads(l) for l in (tmp_path / "c.jsonl").open()
+            if l.strip()]
+    steps = [r for r in recs if "event" not in r]
+    assert [r["step"] for r in steps] == list(range(6))
+    np.testing.assert_array_equal(
+        np.asarray([r["loss"] for r in steps]), full)
+
+    # final params identical to the uninterrupted run
+    import jax
+    for a, b in zip(jax.tree.leaves(clean.params),
+                    jax.tree.leaves(rep.result.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kill_that_never_fires_is_an_error(tmp_path):
+    with pytest.raises(AssertionError, match="never fired"):
+        chaos_run(fleet_spec(tmp_path, total=2), kill_at=[10],
+                  log_fn=lambda s: None)
+
+
+def test_kill_at_hook_raises_at_boundary(tmp_path):
+    hook = KillAtHook(2)
+    with pytest.raises(SimulatedKill):
+        run(fleet_spec(tmp_path, total=4), hooks=[hook],
+            log_fn=lambda s: None)

@@ -1,0 +1,103 @@
+"""Elastic restore: resume the same RunSpec on a different device mesh.
+
+Fast cases run in-process on the single default device; everything
+needing a real multi-device mesh runs ``_elastic_script.py`` in a
+subprocess with 8 virtual devices (device count locks at first jax
+import)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import pytest
+
+from repro.fleet import mesh_from_spec, program_shardings
+from repro.run import MeshSpec
+from repro.run.spec import parse_mesh_shape
+
+SCRIPT = Path(__file__).parent / "_elastic_script.py"
+REPO = Path(__file__).resolve().parents[2]
+
+
+def _run_case(case: str, marker: str):
+    env = dict(os.environ,
+               PYTHONPATH=str(REPO / "src"),
+               JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"))
+    proc = subprocess.run(
+        [sys.executable, str(SCRIPT), case],
+        capture_output=True, text=True, timeout=600, env=env,
+        cwd=str(REPO))
+    assert marker in proc.stdout, (proc.stdout[-2000:], proc.stderr[-4000:])
+
+
+# ---------------------------------------------------------------------
+# Fast, in-process
+# ---------------------------------------------------------------------
+
+def test_mesh_spec_shape_normalization():
+    m = MeshSpec(kind="multi", shape=[4, 2])
+    assert m.shape == (4, 2) and m.n_devices() == 8
+    with pytest.raises(ValueError):
+        MeshSpec(shape=(0,))
+    with pytest.raises(ValueError):
+        MeshSpec(shape=(2, 2, 2, 2))
+
+
+def test_parse_mesh_shape_forms():
+    assert parse_mesh_shape(None) is None
+    assert parse_mesh_shape("8") == (8,)
+    assert parse_mesh_shape("4x2") == (4, 2)
+    assert parse_mesh_shape("2,2,2") == (2, 2, 2)
+    with pytest.raises(SystemExit):
+        parse_mesh_shape("4x0")
+    with pytest.raises(SystemExit):
+        parse_mesh_shape("abc")
+
+
+def test_mesh_from_spec_requires_enough_devices():
+    need = len(jax.devices()) + 1
+    with pytest.raises(ValueError, match="--virtual-devices"):
+        mesh_from_spec(MeshSpec(kind="multi", shape=(need,)))
+    with pytest.raises(ValueError, match="shape is required"):
+        mesh_from_spec(MeshSpec())
+
+
+def test_program_shardings_cover_signature():
+    # a (1,)-mesh exists on any machine; the shardings must mirror the
+    # program's abstract (params, opt_state, batch, hparams) signature
+    from repro.run import ModelSpec, OptSpec, RunSpec, StepSpec
+    from repro.data.pipeline import DataConfig
+    from repro.run.program import build_step_program
+    spec = RunSpec(model=ModelSpec(arch="h2o-danube-1.8b", smoke=True),
+                   data=DataConfig(vocab=0, seq_len=32, global_batch=4),
+                   opt=OptSpec(name="adalomo"), steps=StepSpec(total=1))
+    program = build_step_program(spec)
+    mesh = mesh_from_spec(MeshSpec(kind="multi", shape=(1,)))
+    p_sh, o_sh, b_sh, hp_sh = program_shardings(program, mesh)
+    p_sds, o_sds, b_sds, hp_sds = program.abstract_args()
+    for sh_tree, sds_tree in ((p_sh, p_sds), (o_sh, o_sds),
+                              (b_sh, b_sds), (hp_sh, hp_sds)):
+        assert (jax.tree.structure(sh_tree) ==
+                jax.tree.structure(sds_tree))
+
+
+# ---------------------------------------------------------------------
+# Multi-device, subprocess
+# ---------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_elastic_run_matches_single_device():
+    _run_case("test_elastic_run_matches_single_device",
+              "ELASTIC_PARITY_OK")
+
+
+@pytest.mark.slow
+def test_elastic_resume_reshards_opt_state():
+    _run_case("test_elastic_resume_reshards_opt_state",
+              "ELASTIC_RESHARD_OK")
+
+
+@pytest.mark.slow
+def test_same_mesh_resume_is_bitwise():
+    _run_case("test_same_mesh_resume_is_bitwise", "ELASTIC_BITWISE_OK")

@@ -1,0 +1,171 @@
+"""Preemption safety: SIGTERM/SIGINT → boundary checkpoint → resumable
+marker → ``Preempted`` → bitwise resume (DESIGN.md §"Elastic training
+fleet").  The subprocess test is the end-to-end acceptance path: a real
+SIGTERM against ``repro.launch.train``, exit code 75, then an elastic
+resume onto a *different* virtual-device mesh reproducing the
+uninterrupted loss curve.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from _fleet_common import fleet_spec
+from repro.checkpoint.manager import CheckpointManager
+from repro.fleet import PREEMPTED_EXIT_CODE, Preempted, PreemptionHook
+from repro.run import FaultSpec, Hook, run
+
+REPO = Path(__file__).resolve().parents[2]
+
+
+class SendSignal(Hook):
+    """Raise a real signal against our own pid at a step boundary —
+    exactly what a cluster scheduler's grace period delivers."""
+
+    def __init__(self, at_step, signum=signal.SIGTERM):
+        self.at_step, self.signum = at_step, signum
+
+    def on_step_end(self, ctx, ev):
+        if ev.step + 1 == self.at_step:
+            os.kill(os.getpid(), self.signum)
+
+
+def test_sigterm_checkpoints_at_boundary_and_resumes_bitwise(tmp_path):
+    # every=5 > kill step: the preemption save is OFF the checkpoint
+    # schedule, proving the boundary save is unconditional.
+    clean = run(fleet_spec(tmp_path / "clean", every=5),
+                log_fn=lambda s: None)
+    full = np.asarray(clean.history["loss"])
+
+    spec = fleet_spec(tmp_path / "p", every=5,
+                      metrics_path=str(tmp_path / "m.jsonl"))
+    # user hooks run after the default pipeline, so a signal at boundary
+    # k is observed by PreemptionHook at boundary k+1
+    with pytest.raises(Preempted) as ei:
+        run(spec, hooks=[SendSignal(2)], log_fn=lambda s: None)
+    assert ei.value.step == 3
+
+    mgr = CheckpointManager(tmp_path / "p")
+    assert mgr.latest_step() == 3          # off-schedule boundary save
+    marker = mgr.read_preempt_marker()
+    assert marker == {"step": 3, "resumable": True,
+                      "signum": int(signal.SIGTERM)}
+    records = [json.loads(l) for l in (tmp_path / "m.jsonl").open()]
+    assert {"event": "preempted", "step": 3,
+            "signum": int(signal.SIGTERM)} in records
+
+    orig = signal.getsignal(signal.SIGTERM)
+    res = run(spec, log_fn=lambda s: None)
+    assert res.start_step == 3
+    assert mgr.read_preempt_marker() is None   # marker consumed
+    np.testing.assert_array_equal(np.asarray(res.history["loss"]), full[3:])
+    # original handler restored after the run
+    assert signal.getsignal(signal.SIGTERM) == orig
+
+
+def test_second_signal_escalates(tmp_path):
+    hook = PreemptionHook(CheckpointManager(tmp_path))
+    orig = signal.getsignal(signal.SIGINT)
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        hook._originals[sig] = signal.signal(sig, hook._handler)
+    try:
+        os.kill(os.getpid(), signal.SIGTERM)   # first: sets the flag
+        assert hook.requested == signal.SIGTERM
+        with pytest.raises(KeyboardInterrupt):
+            os.kill(os.getpid(), signal.SIGINT)  # second: escalates
+    finally:
+        hook._restore()                          # no-op if handler restored
+    assert signal.getsignal(signal.SIGINT) == orig
+
+
+def test_preempt_opt_out_and_no_ckpt(tmp_path):
+    # no checkpoint manager → hook never registered
+    res = run(fleet_spec(total=1), log_fn=lambda s: None)
+    assert not any(isinstance(h, PreemptionHook) for h in res.hooks)
+    # fault.preempt=False opts out even with checkpoints
+    res = run(fleet_spec(tmp_path, total=1, fault=FaultSpec(preempt=False)),
+              log_fn=lambda s: None)
+    assert not any(isinstance(h, PreemptionHook) for h in res.hooks)
+
+
+@pytest.mark.slow
+def test_sigterm_then_elastic_resume_subprocess(tmp_path):
+    """Acceptance: SIGTERM a real training process mid-run (exit 75,
+    resumable marker), then resume it with ``--elastic-from`` onto a
+    4x2 virtual-device mesh; the merged metrics stream reproduces the
+    uninterrupted single-device loss curve to tight tolerance (bitwise
+    before the kill)."""
+    spec = fleet_spec(tmp_path / "run", total=40, every=4,
+                      metrics_path=str(tmp_path / "m.jsonl"))
+    spec_file = tmp_path / "spec.json"
+    spec_file.write_text(spec.to_json())
+
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"),
+               JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"))
+    child = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.train", "--spec",
+         str(spec_file)],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env, cwd=str(REPO))
+
+    def steps_done():
+        try:
+            lines = (tmp_path / "m.jsonl").read_text().splitlines()
+        except OSError:
+            return 0
+        n = 0
+        for line in lines:
+            try:
+                n = max(n, json.loads(line).get("step", -1) + 1)
+            except ValueError:
+                pass
+        return n
+
+    deadline = time.time() + 420
+    while steps_done() < 3 and time.time() < deadline:
+        assert child.poll() is None, \
+            f"child exited early:\n{child.stdout.read()[-4000:]}"
+        time.sleep(0.1)
+    assert steps_done() >= 3, "child never reached step 3"
+    child.send_signal(signal.SIGTERM)
+    out, _ = child.communicate(timeout=300)
+    assert child.returncode == PREEMPTED_EXIT_CODE, out[-4000:]
+
+    mgr = CheckpointManager(tmp_path / "run")
+    marker = mgr.read_preempt_marker()
+    assert marker and marker["resumable"]
+    killed_at = marker["step"]
+    assert mgr.latest_step() == killed_at < spec.steps.total
+
+    # resume onto a DIFFERENT mesh: 8 virtual devices, 4x2
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--spec",
+         str(spec_file), "--elastic-from", str(tmp_path / "run"),
+         "--mesh-shape", "4x2", "--virtual-devices", "8",
+         "--history-out", str(tmp_path / "hist.json")],
+        capture_output=True, text=True, timeout=600, env=env,
+        cwd=str(REPO))
+    assert proc.returncode == 0, (proc.stdout[-3000:], proc.stderr[-3000:])
+    assert mgr.read_preempt_marker() is None
+
+    # uninterrupted single-device reference
+    clean = run(fleet_spec(tmp_path / "clean", total=40, every=4),
+                log_fn=lambda s: None)
+    full = np.asarray(clean.history["loss"])
+
+    recs = [json.loads(l) for l in (tmp_path / "m.jsonl").open()
+            if l.strip()]
+    steps = sorted((r for r in recs if "event" not in r),
+                   key=lambda r: r["step"])
+    assert [r["step"] for r in steps] == list(range(40))
+    merged = np.asarray([r["loss"] for r in steps])
+    # bitwise up to the preemption boundary (same device, same stream)
+    np.testing.assert_array_equal(merged[:killed_at], full[:killed_at])
+    # tight tolerance across the mesh change (reduction order only)
+    np.testing.assert_allclose(merged, full, rtol=1e-4, atol=1e-5)

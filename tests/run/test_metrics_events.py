@@ -1,0 +1,93 @@
+"""Liveness events in the metrics stream: heartbeat stalls and straggler
+steps annotate ``{"event": ...}`` records into the MetricsHook JSONL, so
+one file per run carries throughput *and* liveness (consumed by the
+sweep report's per-member event counts)."""
+import json
+import time
+import types
+
+from repro.run import (HeartbeatHook, MetricsHook, StepEvent,
+                       StragglerHook, find_metrics_hook)
+
+
+def _ctx(metrics, extra_hooks=()):
+    return types.SimpleNamespace(
+        spec=types.SimpleNamespace(data=None),
+        start_step=0, log=lambda s: None,
+        hooks=(metrics,) + tuple(extra_hooks))
+
+
+def _ev(step, dt, loss=1.0):
+    return StepEvent(step=step, loss=loss, metrics={}, hparams={"lr": 1e-3},
+                     dt=dt)
+
+
+def _records(path):
+    return [json.loads(l) for l in open(path) if l.strip()]
+
+
+def test_find_metrics_hook():
+    m = MetricsHook("/tmp/unused.jsonl")
+    assert find_metrics_hook((object(), m)) is m
+    assert find_metrics_hook(()) is None
+
+
+def test_annotate_interleaves_event_records(tmp_path):
+    path = tmp_path / "m.jsonl"
+    m = MetricsHook(path)
+    ctx = _ctx(m)
+    m.on_run_start(ctx)
+    m.on_step_end(ctx, _ev(0, dt=0.1))
+    m.annotate("custom", 0, detail="x")
+    m.on_step_end(ctx, _ev(1, dt=0.1))
+    m.on_exit(ctx)
+    recs = _records(path)
+    assert [r.get("event") for r in recs] == [None, "custom", None]
+    assert recs[1] == {"event": "custom", "step": 0, "detail": "x"}
+
+
+def test_straggler_step_annotates_metrics(tmp_path):
+    path = tmp_path / "m.jsonl"
+    m = MetricsHook(path)
+    s = StragglerHook()
+    ctx = _ctx(m, (s,))
+    m.on_run_start(ctx)
+    for step, dt in enumerate([0.1, 0.1, 0.1]):
+        ev = _ev(step, dt)
+        m.on_step_end(ctx, ev)
+        s.on_step_end(ctx, ev)
+    slow = _ev(3, dt=10.0)              # >3x the EMA: flagged
+    m.on_step_end(ctx, slow)
+    s.on_step_end(ctx, slow)
+    m.on_exit(ctx)
+    events = [r for r in _records(path) if "event" in r]
+    assert len(events) == 1
+    e = events[0]
+    assert e["event"] == "straggler" and e["step"] == 3
+    assert e["dt_s"] == 10.0 and e["ema_s"] > 0
+
+
+def test_heartbeat_stall_annotates_metrics(tmp_path):
+    path = tmp_path / "m.jsonl"
+    m = MetricsHook(path)
+    h = HeartbeatHook(timeout_s=0.05)
+    ctx = _ctx(m, (h,))
+    m.on_run_start(ctx)
+    h.on_run_start(ctx)
+    ev = _ev(0, dt=0.01)
+    m.on_step_end(ctx, ev)
+    h.on_step_end(ctx, ev)
+    try:
+        deadline = time.time() + 5.0
+        while time.time() < deadline:     # the watchdog fires off-thread
+            with m._lock:
+                if any("event" in r for r in m.records):
+                    break
+            time.sleep(0.01)
+    finally:
+        h.on_exit(ctx)
+        m.on_exit(ctx)
+    events = [r for r in _records(path) if "event" in r]
+    assert events and events[0]["event"] == "heartbeat_stall"
+    assert events[0]["step"] == 0
+    assert events[0]["timeout_s"] == 0.05
