@@ -9,7 +9,9 @@ prefill re-jit for every distinct padded length — exactly the behaviour
 this benchmark exists to show.
 
 Writes ``benchmarks/artifacts/serve_throughput.json`` with tokens/sec for
-both engines plus compile/preemption counters.
+both engines plus compile/preemption counters, and the committed
+``benchmarks/BENCH_serve.json`` baseline (tokens/s + p50/p99 request
+latency on the Poisson workload).
 
   PYTHONPATH=src python -m benchmarks.serve_throughput [--full]
 """
@@ -22,9 +24,10 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from benchmarks.common import tiny_llama
+from benchmarks.common import tiny_llama, write_bench_json
 from repro.serve.engine import (Engine, PagedEngine, PagedServeConfig,
                                 ServeConfig)
+from repro.serve.scheduler import FINISHED
 
 ART = Path(__file__).parent / "artifacts"
 
@@ -40,21 +43,39 @@ def make_workload(n_requests: int, min_len: int, max_len: int,
     return list(zip(arrivals.tolist(), prompts))
 
 
+def _latency_stats(latencies_s: list) -> dict:
+    lat = np.asarray(latencies_s, dtype=np.float64)
+    return {"n": int(lat.size),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "mean_ms": float(lat.mean() * 1e3)}
+
+
 def _drain_paged(engine: PagedEngine, workload, max_new: int) -> dict:
     t0 = time.time()
     pending = list(workload)
+    arrival: dict = {}    # rid -> scheduled arrival (s since t0)
+    done_at: dict = {}    # rid -> completion (s since t0)
     while pending or engine.scheduler.has_work():
         now = time.time() - t0
         while pending and pending[0][0] <= now:
-            engine.submit(pending.pop(0)[1], max_new)
+            at, prompt = pending.pop(0)
+            rid = engine.submit(prompt, max_new)
+            arrival[rid] = at
         if engine.scheduler.has_work():
             engine.step()
+            now = time.time() - t0
+            for rid, req in engine.requests.items():
+                if req.status == FINISHED and rid not in done_at:
+                    done_at[rid] = now
         elif pending:
             time.sleep(min(0.01, pending[0][0] - now))
     wall = time.time() - t0
     n_tok = sum(len(r.out) for r in engine.requests.values())
     return {"wall_s": wall, "new_tokens": n_tok,
             "tokens_per_sec": n_tok / wall,
+            "latency": _latency_stats(
+                [done_at[r] - arrival[r] for r in done_at]),
             "decode_compiles": engine.decode_compile_count(),
             "prefill_compiles": engine.prefill_compile_count(),
             "preemptions": sum(r.n_preempted
@@ -66,6 +87,7 @@ def _drain_legacy(engine: Engine, workload, batch: int) -> dict:
     pending = list(workload)
     n_tok = 0
     n_batches = 0
+    lats: list = []
     while pending:
         now = time.time() - t0
         arrived = [p for p in pending if p[0] <= now]
@@ -74,11 +96,15 @@ def _drain_legacy(engine: Engine, workload, batch: int) -> dict:
             continue
         take, pending = pending[:batch], pending[batch:]
         outs = engine.generate([p for _, p in take])
+        done = time.time() - t0
+        # batch-synchronous: every request completes when the batch does
+        lats.extend(done - at for at, _ in take)
         n_tok += sum(len(o) for o in outs)
         n_batches += 1
     wall = time.time() - t0
     return {"wall_s": wall, "new_tokens": n_tok,
-            "tokens_per_sec": n_tok / wall, "batches": n_batches}
+            "tokens_per_sec": n_tok / wall,
+            "latency": _latency_stats(lats), "batches": n_batches}
 
 
 def run(fast: bool = True):
@@ -120,6 +146,8 @@ def run(fast: bool = True):
            / res_legacy["tokens_per_sec"]}
     ART.mkdir(exist_ok=True)
     (ART / "serve_throughput.json").write_text(json.dumps(out, indent=2))
+    # committed baseline: the ROADMAP "serve tokens/s" gap
+    write_bench_json("serve", out)
 
     yield (f"serve/paged,{1e6 / res_paged['tokens_per_sec']:.1f},"
            f"{res_paged['tokens_per_sec']:.1f} tok/s "

@@ -33,7 +33,7 @@ class _Collect(Hook):
 
     def on_step_end(self, ctx, ev) -> None:
         self.dts.append(ev.dt)
-        self.ntoks.append(float(ev.metrics["ntokens"]))
+        self.ntoks.append(ev.metrics["ntokens"])
 
 
 def _spec(arch, steps: int) -> RunSpec:

@@ -8,12 +8,21 @@
 #   FAST=1 scripts/ci.sh     # quick signal: skip the slow marker
 #   FLEET=1 scripts/ci.sh    # fleet tier only: sweep smoke, preemption
 #                            # signal path, elastic virtual-device tests
+#   LINT=0 scripts/ci.sh     # skip the repro-lint static-analysis stage
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 TIMEOUT_S="${TIMEOUT_S:-1500}"
 ARGS=(-x -q)
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${LINT:-1}" == "1" ]]; then
+  # Static-analysis stage (every tier, including FAST): repro-lint fails
+  # on any finding that is neither inline-suppressed nor justified in
+  # .repro-lint-baseline.json — so a reintroduced donated-buffer reuse,
+  # interpret=True, or hot-path host sync breaks CI before any test runs.
+  python -m repro.analysis.lint src benchmarks
+fi
 
 if [[ "${FLEET:-0}" == "1" ]]; then
   # Fleet tier: the elastic-training acceptance surface in one bounded

@@ -1,0 +1,38 @@
+"""repro-lint — an invariant-checking static analyzer for the
+jit/Pallas/hook stack.
+
+Every load-bearing guarantee the repo has accumulated — zero steady-state
+recompiles, donated-buffer safety, kernel hygiene, spec round-trip
+completeness — is a *structural* property of the source, so it can be
+checked at the AST level at commit time instead of re-proved by a runtime
+test per subsystem.  The package is:
+
+  * :mod:`repro.analysis.core` — the shared traversal engine: import-alias
+    resolution (``import jax.numpy as jnp`` and ``from jax import numpy as
+    jnp`` both resolve to ``jax.numpy``), scope-aware function collection,
+    traced-context inference (function bodies reachable from ``jax.jit`` /
+    ``pl.pallas_call`` / ``lax.scan`` / StepProgram-style ``make_*``
+    builders), a conservative taint walk for traced values, and inline
+    ``# repro-lint: disable=R2`` suppression parsing;
+  * :mod:`repro.analysis.rules` — the rule set (R1..R6, see
+    :data:`repro.analysis.rules.ALL_RULES` and DESIGN.md §"Static
+    analysis: repro-lint");
+  * :mod:`repro.analysis.baseline` — the committed-baseline format (every
+    entry carries a one-line justification; stale entries are errors);
+  * :mod:`repro.analysis.lint` — the CLI:
+    ``python -m repro.analysis.lint [paths] --format text|json``.
+"""
+from repro.analysis.core import Finding, ModuleModel, analyze_module
+from repro.analysis.rules import ALL_RULES
+
+__all__ = ["Finding", "ModuleModel", "analyze_module", "lint_paths",
+           "main", "ALL_RULES"]
+
+
+def __getattr__(name):
+    # lint is imported lazily so ``python -m repro.analysis.lint`` doesn't
+    # trip runpy's found-in-sys.modules warning.
+    if name in ("lint_paths", "main"):
+        from repro.analysis import lint
+        return getattr(lint, name)
+    raise AttributeError(name)

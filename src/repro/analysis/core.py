@@ -1,0 +1,713 @@
+"""Shared traversal engine for repro-lint.
+
+One parse of a module produces a :class:`ModuleModel` every rule shares:
+
+  * **Import table** — local names resolved to canonical dotted paths, so
+    ``jnp.asarray`` and ``from jax import numpy as np2; np2.asarray`` both
+    canonicalize to ``jax.numpy.asarray`` (rules match on canonical names,
+    never on surface spellings).
+  * **Function table** — every ``def``/``lambda`` with its qualname,
+    enclosing class/function, and scope-chain name lookup (latest *and*
+    shadowed bindings, so a ``# noqa: F811`` redefinition seeds both).
+  * **Traced-context inference** — the set of function bodies that execute
+    under a jax trace: seeds are functions passed to ``jax.jit`` /
+    ``pl.pallas_call`` / ``jax.lax.scan``-family / ``jax.vmap``-family
+    transforms (as arguments, decorators, or ``functools.partial(jax.jit,
+    ...)`` decorators), functions *returned* by a local callee that is
+    immediately jitted (``jax.jit(self._make_chunk_fn())``), and — the
+    StepProgram/registry convention — closures returned by ``make_*``
+    builders.  Tracedness propagates to nested defs and locally-resolvable
+    callees (including ``self.method()`` within a class).
+  * **Taint** — a conservative source-order walk classifying which local
+    names hold traced array values inside a traced function (parameters
+    minus ``static_argnames``, results of ``jax.*`` calls) with the static
+    escapes (``.shape``/``.dtype``/``.ndim``/``len()``/``isinstance()``)
+    untainted, so rules can tell a Python branch on a *shape* (static,
+    fine) from a branch on a *value* (concretization / recompile hazard).
+  * **Suppressions** — ``# repro-lint: disable=R1[,R2]`` on the finding's
+    line or on a comment-only line directly above it.
+
+The engine is pure stdlib ``ast`` — no imports of the analyzed code, so
+linting never executes (or requires the dependencies of) the target.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterator, Optional
+
+# --------------------------------------------------------------------------
+# findings
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, addressable for suppression and baselining.
+
+    ``key()`` deliberately excludes the line *number*: baselines match on
+    (rule, path, enclosing qualname, stripped line text) so unrelated
+    edits above a baselined line don't invalidate the entry."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    context: str          # enclosing qualname, or "<module>"
+    line_text: str        # stripped source of the offending line
+
+    def key(self) -> tuple:
+        return (self.rule, _posix(self.path), self.context, self.line_text)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{self.context}] {self.message}")
+
+
+def _posix(path: str) -> str:
+    return str(path).replace("\\", "/")
+
+
+# --------------------------------------------------------------------------
+# import-alias resolution
+# --------------------------------------------------------------------------
+
+
+class ImportTable:
+    """Maps local names to canonical dotted module/attribute paths."""
+
+    def __init__(self, tree: ast.AST):
+        self.names: dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:
+                        self.names[a.asname] = a.name
+                    else:
+                        # ``import jax.numpy`` binds the *root* name
+                        self.names[a.name.split(".")[0]] = \
+                            a.name.split(".")[0]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.names[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Canonical dotted path of a Name/Attribute chain, else None."""
+        if isinstance(node, ast.Name):
+            return self.names.get(node.id, node.id)
+        if isinstance(node, ast.Attribute):
+            base = self.resolve(node.value)
+            if base is None:
+                return None
+            return f"{base}.{node.attr}"
+        return None
+
+
+# --------------------------------------------------------------------------
+# function table
+# --------------------------------------------------------------------------
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+# transforms whose function-valued arguments run under a jax trace
+_TRACING_CALLS = {
+    "jax.jit", "jax.pmap", "jax.vmap", "jax.grad", "jax.value_and_grad",
+    "jax.checkpoint", "jax.remat", "jax.eval_shape",
+    "jax.custom_vjp", "jax.custom_jvp", "jax.linearize", "jax.jvp",
+    "jax.lax.scan", "jax.lax.while_loop", "jax.lax.cond",
+    "jax.lax.fori_loop", "jax.lax.map", "jax.lax.switch",
+    "jax.lax.associative_scan", "jax.lax.custom_root",
+    "jax.experimental.pallas.pallas_call",
+    "jax.experimental.shard_map.shard_map",
+}
+
+
+@dataclasses.dataclass
+class Func:
+    """One function body and everything rules need to reason about it."""
+
+    node: ast.AST                      # FunctionDef / AsyncFunctionDef / Lambda
+    name: str
+    qualname: str
+    parent: Optional["Func"]           # enclosing function, if nested
+    cls: Optional[str]                 # enclosing class name, if a method
+    static_params: set = dataclasses.field(default_factory=set)
+    traced: bool = False
+    traced_via: str = ""               # how tracedness was established
+    # True when this function is the *direct* operand of a tracing
+    # transform (its parameters are tracers); propagation-traced callees
+    # keep False — their arguments may be static Python values at the
+    # call site, so rules must not assume their params are traced.
+    params_traced: bool = False
+    # Per-parameter taint inferred from call sites inside traced code:
+    # ``helper(x, m * n)`` taints helper's first param only — the second
+    # receives a static Python int.
+    tainted_params: set = dataclasses.field(default_factory=set)
+
+    def params(self) -> list:
+        a = self.node.args
+        out = [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+        if a.vararg:
+            out.append(a.vararg.arg)
+        if a.kwarg:
+            out.append(a.kwarg.arg)
+        return out
+
+    def body(self) -> list:
+        b = self.node.body
+        return b if isinstance(b, list) else [ast.Expr(b)]  # Lambda
+
+    def own_statements(self) -> Iterator[ast.stmt]:
+        """Statements of this function, not descending into nested defs."""
+        yield from _iter_own(self.body())
+
+    def own_nodes(self) -> Iterator[ast.AST]:
+        """All expression/statement nodes of this function's own body,
+        each exactly once, not descending into nested function bodies
+        (their nodes belong to the nested :class:`Func`)."""
+        for stmt in self.own_statements():
+            if isinstance(stmt, _FUNC_NODES):
+                # the def statement itself (decorators, defaults) is ours
+                for field in ("decorator_list",):
+                    for d in getattr(stmt, field, []):
+                        yield from ast.walk(d)
+                continue
+            yield stmt
+            yield from stmt_exprs(stmt)
+
+
+def _iter_own(body: list) -> Iterator[ast.stmt]:
+    for stmt in body:
+        yield stmt
+        if isinstance(stmt, _FUNC_NODES):
+            continue
+        yield from _iter_own_children(stmt)
+
+
+def _iter_own_children(stmt: ast.AST) -> Iterator[ast.stmt]:
+    for field in stmt._fields:
+        value = getattr(stmt, field, None)
+        if isinstance(value, list):
+            for item in value:
+                if isinstance(item, ast.stmt):
+                    yield item
+                    if not isinstance(item, _FUNC_NODES):
+                        yield from _iter_own_children(item)
+                elif isinstance(item, ast.AST):
+                    # ExceptHandler / match_case hold statement lists
+                    yield from _iter_own_children(item)
+
+
+def stmt_exprs(stmt: ast.AST) -> Iterator[ast.AST]:
+    """Expression(-ish) nodes belonging to this statement only — child
+    statements are iterated by their own :meth:`Func.own_statements`
+    round, nested function bodies by their own :class:`Func`."""
+    for child in ast.iter_child_nodes(stmt):
+        if isinstance(child, (ast.stmt,) + _FUNC_NODES):
+            continue
+        yield from _walk_expr_skip_stmts(child)
+
+
+def _walk_expr_skip_stmts(node: ast.AST) -> Iterator[ast.AST]:
+    yield node
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.stmt,) + _FUNC_NODES):
+            continue
+        yield from _walk_expr_skip_stmts(child)
+
+
+def _walk_no_funcs(node: ast.AST) -> Iterator[ast.AST]:
+    yield node
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, _FUNC_NODES):
+            continue
+        yield from _walk_no_funcs(child)
+
+
+class _FuncCollector(ast.NodeVisitor):
+    def __init__(self):
+        self.funcs: list[Func] = []
+        self.by_node: dict[int, Func] = {}
+        # scope key (id of enclosing Func node, or None) -> name -> [Func]
+        self.scopes: dict[Optional[int], dict[str, list[Func]]] = {None: {}}
+        self.methods: dict[str, dict[str, list[Func]]] = {}
+        self._stack: list[str] = []
+        self._func_stack: list[Func] = []
+        self._cls_stack: list[str] = []
+
+    def _add(self, node, name) -> Func:
+        parent = self._func_stack[-1] if self._func_stack else None
+        cls = self._cls_stack[-1] if self._cls_stack else None
+        qual = ".".join(self._stack + [name]) if self._stack else name
+        f = Func(node=node, name=name, qualname=qual, parent=parent,
+                 cls=cls if (parent is None or parent.cls == cls) else None)
+        self.funcs.append(f)
+        self.by_node[id(node)] = f
+        key = id(parent.node) if parent else None
+        self.scopes.setdefault(key, {}).setdefault(name, []).append(f)
+        if f.cls is not None and parent is None:
+            self.methods.setdefault(f.cls, {}).setdefault(name, []).append(f)
+        return f
+
+    def _visit_func(self, node):
+        f = self._add(node, node.name)
+        self._stack.append(node.name)
+        self._func_stack.append(f)
+        self.generic_visit(node)
+        self._func_stack.pop()
+        self._stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_Lambda(self, node):
+        f = self._add(node, "<lambda>")
+        self._func_stack.append(f)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    def visit_ClassDef(self, node):
+        self._stack.append(node.name)
+        self._cls_stack.append(node.name)
+        self.generic_visit(node)
+        self._cls_stack.pop()
+        self._stack.pop()
+
+
+# --------------------------------------------------------------------------
+# module model
+# --------------------------------------------------------------------------
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+
+class ModuleModel:
+    """Everything rules need about one parsed module."""
+
+    def __init__(self, path: str, source: str,
+                 is_test: Optional[bool] = None):
+        self.path = _posix(path)
+        self.source = source
+        self._is_test = is_test
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.imports = ImportTable(self.tree)
+        c = _FuncCollector()
+        c.visit(self.tree)
+        self.funcs = c.funcs
+        self._by_node = c.by_node
+        self._scopes = c.scopes
+        self._methods = c.methods
+        self.suppressions = self._parse_suppressions()
+        self._infer_traced()
+        self._infer_param_taint()
+
+    # ------------------------------------------------------------- helpers
+    @property
+    def is_test(self) -> bool:
+        if self._is_test is not None:
+            return self._is_test
+        parts = Path(self.path).parts
+        return ("tests" in parts or "test" in parts
+                or Path(self.path).name.startswith("test_"))
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        return self.imports.resolve(node)
+
+    def func_of(self, node: ast.AST) -> Optional[Func]:
+        return self._by_node.get(id(node))
+
+    def enclosing_qualname(self, lineno: int) -> str:
+        best = None
+        for f in self.funcs:
+            n = f.node
+            end = getattr(n, "end_lineno", n.lineno)
+            if n.lineno <= lineno <= end:
+                if best is None or n.lineno >= best.node.lineno:
+                    best = f
+        return best.qualname if best else "<module>"
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        text = (self.lines[line - 1].strip()
+                if 0 < line <= len(self.lines) else "")
+        return Finding(rule=rule, path=self.path, line=line, col=col,
+                       message=message,
+                       context=self.enclosing_qualname(line),
+                       line_text=text)
+
+    def lookup(self, name: str, scope: Optional[Func]) -> list:
+        """All Funcs bound to ``name`` visible from ``scope`` (scope chain
+        then module level).  Returns every binding so shadowed
+        redefinitions are seeded too."""
+        cur = scope
+        while cur is not None:
+            hits = self._scopes.get(id(cur.node), {}).get(name)
+            if hits:
+                return hits
+            cur = cur.parent
+        return self._scopes.get(None, {}).get(name, [])
+
+    def lookup_method(self, cls: str, name: str) -> list:
+        return self._methods.get(cls, {}).get(name, [])
+
+    def nested_funcs(self, f: Func) -> list:
+        out = []
+        for hits in self._scopes.get(id(f.node), {}).values():
+            out.extend(hits)
+        return out
+
+    def returned_local_funcs(self, f: Func) -> list:
+        """Local defs that ``f`` returns by name (builder convention)."""
+        out = []
+        for stmt in f.own_statements():
+            if isinstance(stmt, ast.Return) and isinstance(stmt.value,
+                                                           ast.Name):
+                out.extend(self.lookup(stmt.value.id, f))
+        return out
+
+    # -------------------------------------------------------- suppressions
+    def _parse_suppressions(self) -> dict:
+        out: dict[int, set] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                rules = {r.strip().upper() for r in m.group(1).split(",")
+                         if r.strip()}
+                out[i] = rules
+        return out
+
+    def suppressed(self, finding: Finding) -> bool:
+        line = finding.line
+        if finding.rule in self.suppressions.get(line, ()):
+            return True
+        # a comment-only line directly above also applies
+        prev = self.lines[line - 2].strip() if line >= 2 else ""
+        if prev.startswith("#") and \
+                finding.rule in self.suppressions.get(line - 1, ()):
+            return True
+        return False
+
+    # ------------------------------------------------- traced-context pass
+    def _infer_traced(self) -> None:
+        seeds: list[tuple[Func, str]] = []
+
+        def seed_arg(arg: ast.AST, scope: Optional[Func], via: str,
+                     static: set):
+            """Mark a function-valued argument of a tracing transform."""
+            if isinstance(arg, ast.Name):
+                for f in self.lookup(arg.id, scope):
+                    f.static_params |= static
+                    f.params_traced = True
+                    seeds.append((f, via))
+            elif isinstance(arg, ast.Lambda):
+                f = self.func_of(arg)
+                if f is not None:
+                    f.static_params |= static
+                    f.params_traced = True
+                    seeds.append((f, via))
+            elif isinstance(arg, ast.Call):
+                # jax.jit(self._make_chunk_fn()) / jax.jit(make_step(cfg)):
+                # the *returned* local defs of the callee are what trace.
+                callee = None
+                fn = arg.func
+                if isinstance(fn, ast.Name):
+                    hits = self.lookup(fn.id, scope)
+                    callee = hits[-1] if hits else None
+                elif (isinstance(fn, ast.Attribute)
+                      and isinstance(fn.value, ast.Name)
+                      and fn.value.id == "self" and scope is not None
+                      and scope.cls):
+                    hits = self.lookup_method(scope.cls, fn.attr)
+                    callee = hits[-1] if hits else None
+                if callee is not None:
+                    for f in self.returned_local_funcs(callee):
+                        f.static_params |= static
+                        f.params_traced = True
+                        seeds.append((f, via))
+            elif isinstance(arg, ast.Attribute) and \
+                    isinstance(arg.value, ast.Name) and \
+                    arg.value.id == "self" and scope is not None and \
+                    scope.cls:
+                for f in self.lookup_method(scope.cls, arg.attr):
+                    f.static_params |= static
+                    f.params_traced = True
+                    seeds.append((f, via))
+
+        # (a) calls to tracing transforms anywhere in the module
+        for owner in [None] + self.funcs:
+            nodes = (owner.own_nodes() if owner is not None
+                     else self._module_level_nodes())
+            for node in nodes:
+                if not isinstance(node, ast.Call):
+                    continue
+                target = self.resolve(node.func)
+                if target not in _TRACING_CALLS:
+                    continue
+                static = _static_argnames(node)
+                for arg in node.args:
+                    seed_arg(arg, owner, target, static)
+
+        # (b) decorators: @jax.jit / @functools.partial(jax.jit, ...)
+        for f in self.funcs:
+            for deco in getattr(f.node, "decorator_list", []):
+                target, static = self._decorator_trace(deco)
+                if target:
+                    f.static_params |= static
+                    f.params_traced = True
+                    seeds.append((f, target))
+
+        # (c) registry/StepProgram builder convention: closures returned
+        # by ``make_*`` functions are jitted by their (cross-module)
+        # consumers — treat their bodies as traced.
+        for f in self.funcs:
+            if f.name.startswith("make_"):
+                for ret in self.returned_local_funcs(f):
+                    ret.params_traced = True
+                    seeds.append((ret, "make_* builder"))
+
+        # propagate: nested defs + locally-resolvable callees
+        work = list(seeds)
+        while work:
+            f, via = work.pop()
+            if f.traced:
+                continue
+            f.traced = True
+            f.traced_via = via
+            for nested in self.nested_funcs(f):
+                work.append((nested, via))
+            for node in f.own_nodes():
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = node.func
+                if isinstance(fn, ast.Name):
+                    for g in self.lookup(fn.id, f):
+                        work.append((g, via))
+                elif (isinstance(fn, ast.Attribute)
+                      and isinstance(fn.value, ast.Name)
+                      and fn.value.id == "self" and f.cls):
+                    for g in self.lookup_method(f.cls, fn.attr):
+                        work.append((g, via))
+
+    def _infer_param_taint(self) -> None:
+        """Flow call-site argument taint into locally-resolvable callees
+        (to fixpoint): a traced caller passing a traced value taints
+        exactly the receiving parameter, so propagation-traced helpers
+        get per-param precision instead of all-or-nothing."""
+        changed = True
+        while changed:
+            changed = False
+            for f in self.funcs:
+                if not f.traced:
+                    continue
+                taint = Taint(self, f)
+                for stmt in f.own_statements():
+                    for node in stmt_exprs(stmt):
+                        if isinstance(node, ast.Call):
+                            changed |= self._flow_call(f, node, taint)
+                    taint.advance(stmt)
+
+    def _flow_call(self, caller: Func, call: ast.Call,
+                   taint: "Taint") -> bool:
+        fn = call.func
+        callees: list = []
+        if isinstance(fn, ast.Name):
+            callees = self.lookup(fn.id, caller)
+        elif (isinstance(fn, ast.Attribute)
+              and isinstance(fn.value, ast.Name)
+              and fn.value.id == "self" and caller.cls):
+            callees = self.lookup_method(caller.cls, fn.attr)
+        changed = False
+        for g in callees:
+            params = [p for p in g.params() if p != "self"]
+            for i, arg in enumerate(call.args):
+                if i < len(params) and taint.tainted(arg) and \
+                        params[i] not in g.tainted_params:
+                    g.tainted_params.add(params[i])
+                    changed = True
+            for kw in call.keywords:
+                if kw.arg in params and taint.tainted(kw.value) and \
+                        kw.arg not in g.tainted_params:
+                    g.tainted_params.add(kw.arg)
+                    changed = True
+        return changed
+
+    def _module_level_nodes(self) -> Iterator[ast.AST]:
+        for stmt in _iter_own(self.tree.body):
+            if isinstance(stmt, _FUNC_NODES):
+                continue
+            yield from _walk_no_funcs(stmt)
+
+    def _decorator_trace(self, deco: ast.AST):
+        """(canonical transform, static_argnames) if the decorator traces."""
+        if self.resolve(deco) in _TRACING_CALLS:
+            return self.resolve(deco), set()
+        if isinstance(deco, ast.Call):
+            target = self.resolve(deco.func)
+            if target in _TRACING_CALLS:
+                return target, _static_argnames(deco)
+            if target == "functools.partial" and deco.args:
+                inner = self.resolve(deco.args[0])
+                if inner in _TRACING_CALLS:
+                    return inner, _static_argnames(deco)
+        return None, set()
+
+
+def _static_argnames(call: ast.Call) -> set:
+    """String static_argnames declared on a jit call node."""
+    out: set = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and \
+                        isinstance(node.value, str):
+                    out.add(node.value)
+    return out
+
+
+# --------------------------------------------------------------------------
+# taint: which expressions hold traced values inside a traced function
+# --------------------------------------------------------------------------
+
+# attribute reads that yield static (trace-time Python) metadata
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size"}
+# builtins whose results are static under trace
+_STATIC_CALLS = {"len", "isinstance", "hasattr", "getattr", "type", "range",
+                 "enumerate", "zip", "min", "max", "tuple", "list", "dict",
+                 "sorted"}
+
+
+class Taint:
+    """Conservative, source-order taint for one traced function.
+
+    Parameters (minus ``self`` and ``static_argnames``) start tainted;
+    results of ``jax.*`` / ``jax.numpy.*`` calls are tainted; shape/dtype
+    metadata escapes.  ``advance(stmt)`` folds a statement's assignments
+    into the name set; ``tainted(expr)`` classifies an expression.  No
+    fixpoint over loops — a name tainted later in the body is clean at
+    the top of the loop, which under-reports rather than over-reports.
+    """
+
+    def __init__(self, model: ModuleModel, func: Func):
+        self.model = model
+        self.names: set = set()
+        skip = {"self"} | set(func.static_params)
+        if func.params_traced:
+            for p in func.params():
+                if p not in skip:
+                    self.names.add(p)
+        else:
+            # propagation-traced: only call-site-tainted params
+            self.names |= func.tainted_params - skip
+
+    def advance(self, stmt: ast.stmt) -> None:
+        targets: list = []
+        if isinstance(stmt, ast.Assign):
+            value, targets = stmt.value, stmt.targets
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            value, targets = stmt.value, [stmt.target]
+        elif isinstance(stmt, ast.For):
+            value, targets = stmt.iter, [stmt.target]
+        else:
+            return
+        is_tainted = value is not None and self.tainted(value)
+        for t in targets:
+            for name in _target_names(t):
+                if is_tainted:
+                    self.names.add(name)
+                else:
+                    self.names.discard(name)
+
+    def tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.tainted(node.value)
+        if isinstance(node, ast.Call):
+            target = self.model.resolve(node.func)
+            if target in _STATIC_CALLS:
+                return False
+            if target and (target.startswith("jax.")
+                           or target.startswith("jax.numpy")):
+                return True
+            if isinstance(node.func, ast.Attribute):
+                # method on a tainted object (x.astype, x.reshape, ...)
+                return self.tainted(node.func.value) or \
+                    any(self.tainted(a) for a in node.args)
+            return any(self.tainted(a) for a in node.args)
+        if isinstance(node, ast.BinOp):
+            return self.tainted(node.left) or self.tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.tainted(node.operand)
+        if isinstance(node, ast.Compare):
+            # identity/membership tests are structural (x is None,
+            # "key" in pytree) — static at trace time
+            if all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+                   for op in node.ops):
+                return False
+            return self.tainted(node.left) or \
+                any(self.tainted(c) for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            return any(self.tainted(v) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return self.tainted(node.body) or self.tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.tainted(node.value)
+        return False
+
+
+def _target_names(target: ast.AST) -> Iterator[str]:
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for e in target.elts:
+            yield from _target_names(e)
+    elif isinstance(target, ast.Starred):
+        yield from _target_names(target.value)
+
+
+# --------------------------------------------------------------------------
+# dotted-path helpers shared by rules
+# --------------------------------------------------------------------------
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Surface dotted form of a Name/Attribute chain (``self._pages``),
+    used where *identity* of a variable matters, not canonical imports."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def analyze_module(path: str, source: Optional[str] = None,
+                   rules=None, is_test: Optional[bool] = None) -> list:
+    """Parse + run rules over one module; returns non-suppressed findings
+    (suppressed ones are dropped here, baselining happens in the CLI)."""
+    from repro.analysis.rules import ALL_RULES
+    if source is None:
+        source = Path(path).read_text()
+    model = ModuleModel(path, source, is_test=is_test)
+    out = []
+    for rule in (rules if rules is not None else ALL_RULES):
+        for f in rule.check(model):
+            if not model.suppressed(f):
+                out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out

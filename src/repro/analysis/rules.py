@@ -1,0 +1,809 @@
+"""repro-lint rule set R1..R6.
+
+Each rule is a stateless object with ``id``, ``title``, ``invariant``
+(what guarantee it protects — surfaced by ``--list-rules`` and the DESIGN
+table) and ``check(model) -> [Finding]``.  Rules reason over the shared
+:class:`~repro.analysis.core.ModuleModel`: canonical import resolution,
+traced-context inference and taint come from there, so every rule handles
+aliased imports (``from jax import numpy as jnp``), decorated and nested
+jitted functions identically.
+
+The rule IDs are stable API — suppression comments and baseline entries
+reference them — so new checks extend a rule's scope or claim a new ID,
+never repurpose an old one.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.core import (Finding, Func, ModuleModel, Taint, dotted,
+                                 stmt_exprs as _stmt_exprs)
+
+_COMPARE_IDENTITY = (ast.Is, ast.IsNot, ast.In, ast.NotIn)
+
+
+# --------------------------------------------------------------------------
+# R1 — recompile hazards inside traced code
+# --------------------------------------------------------------------------
+
+
+class RecompileHazard:
+    """Python control flow / concretization on traced values, and
+    non-hashable static args: each forces a retrace (or a
+    ConcretizationTypeError), breaking the zero-steady-state-recompile
+    contract the serving engine and hook pipeline assert at runtime."""
+
+    id = "R1"
+    title = "recompile-hazard"
+    invariant = ("zero steady-state recompiles: no Python branching/"
+                 "formatting on traced values, no unhashable static args")
+
+    def check(self, model: ModuleModel) -> list:
+        out = []
+        for func in model.funcs:
+            if not func.traced:
+                continue
+            out.extend(self._check_traced(model, func))
+        out.extend(self._check_static_args(model))
+        return out
+
+    # -------------------------------------------------- traced-body checks
+    def _check_traced(self, model: ModuleModel, func: Func) -> Iterator:
+        taint = Taint(model, func)
+        for stmt in func.own_statements():
+            if isinstance(stmt, (ast.If, ast.While)):
+                if self._value_branch(taint, stmt.test):
+                    yield model.finding(
+                        self.id, stmt.test,
+                        "Python branch on a traced value inside traced "
+                        "code — concretizes at trace time (retrace per "
+                        "value or ConcretizationTypeError); use "
+                        "jnp.where/lax.cond/lax.select")
+            for node in _stmt_exprs(stmt):
+                if isinstance(node, ast.IfExp) and \
+                        self._value_branch(taint, node.test):
+                    yield model.finding(
+                        self.id, node,
+                        "conditional expression on a traced value inside "
+                        "traced code — use jnp.where/lax.select")
+                elif isinstance(node, ast.JoinedStr):
+                    for part in node.values:
+                        if isinstance(part, ast.FormattedValue) and \
+                                taint.tainted(part.value):
+                            yield model.finding(
+                                self.id, node,
+                                "f-string formats a traced value inside "
+                                "traced code — forces host concretization "
+                                "at trace time")
+                            break
+                elif isinstance(node, ast.Call):
+                    target = model.resolve(node.func)
+                    if target in ("int", "bool") and node.args and \
+                            taint.tainted(node.args[0]):
+                        yield model.finding(
+                            self.id, node,
+                            f"{target}() on a traced value inside traced "
+                            "code — shape/value must be static here, or "
+                            "stay on device (jnp cast)")
+                    elif (isinstance(node.func, ast.Attribute)
+                          and node.func.attr == "format"
+                          and any(taint.tainted(a) for a in node.args)):
+                        yield model.finding(
+                            self.id, node,
+                            "str.format() of a traced value inside traced "
+                            "code — forces host concretization")
+            taint.advance(stmt)
+
+    @staticmethod
+    def _value_branch(taint: Taint, test: ast.AST) -> bool:
+        """Tainted test that is a *value* branch (identity/membership
+        tests like ``x is None`` stay legal trace-time Python)."""
+        if not taint.tainted(test):
+            return False
+        if isinstance(test, ast.Compare) and \
+                all(isinstance(op, _COMPARE_IDENTITY) for op in test.ops):
+            return False
+        return True
+
+    # ---------------------------------------------- static-argument checks
+    def _check_static_args(self, model: ModuleModel) -> Iterator:
+        """``f = jax.jit(g, static_argnums=(2,))`` then ``f(a, b, [..])``:
+        an unhashable literal at a static position raises (or, for
+        drifting values, retraces) on every call."""
+        static_pos: dict[str, set] = {}
+        static_names: dict[str, set] = {}
+        for node in ast.walk(model.tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            call = node.value
+            if not (isinstance(call, ast.Call)
+                    and model.resolve(call.func) == "jax.jit"):
+                continue
+            pos, names = _jit_static_spec(call)
+            if not pos and not names:
+                continue
+            for t in node.targets:
+                d = dotted(t)
+                if d:
+                    static_pos[d] = pos
+                    static_names[d] = names
+        if not static_pos:
+            return
+        for node in ast.walk(model.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if d not in static_pos:
+                continue
+            for i, arg in enumerate(node.args):
+                if i in static_pos[d] and _unhashable_literal(arg):
+                    yield model.finding(
+                        self.id, arg,
+                        f"unhashable literal passed at static position "
+                        f"{i} of jitted `{d}` — static args must be "
+                        "hashable and stable, or every call retraces")
+            for kw in node.keywords:
+                if kw.arg in static_names[d] and \
+                        _unhashable_literal(kw.value):
+                    yield model.finding(
+                        self.id, kw.value,
+                        f"unhashable literal passed as static arg "
+                        f"`{kw.arg}` of jitted `{d}`")
+
+
+def _jit_static_spec(call: ast.Call) -> tuple:
+    pos: set = set()
+    names: set = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    pos.add(n.value)
+        elif kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+    return pos, names
+
+
+def _unhashable_literal(node: ast.AST) -> bool:
+    return isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.DictComp, ast.SetComp))
+
+
+# --------------------------------------------------------------------------
+# R2 — host syncs in hot paths
+# --------------------------------------------------------------------------
+
+# the per-step hot path of the serving engines (decode loop)
+_ENGINE_HOT = {"step", "run", "_run_chunk", "_collect"}
+_SYNC_CALLS = {"jax.device_get", "jax.block_until_ready"}
+
+
+class HostSyncInHotPath:
+    """Blocking device→host transfers in per-step/per-token paths: the
+    serve decode loop, ``on_step_end`` hooks, and traced step programs.
+    One stray ``.item()`` / ``float(tracer)`` serializes the device
+    pipeline every step.  StepEvent fields are host scalars by contract
+    (the runner does ONE bundled transfer per step), so coercions of
+    ``ev.*`` in hooks are either a sync (bug) or redundant."""
+
+    id = "R2"
+    title = "host-sync-in-hot-path"
+    invariant = ("hot paths make at most one deliberate (suppressed) "
+                 "host sync per step/chunk boundary")
+
+    def check(self, model: ModuleModel) -> list:
+        out = []
+        for func in model.funcs:
+            if func.traced:
+                out.extend(self._check_traced(model, func))
+            elif func.name == "on_step_end":
+                out.extend(self._check_hook(model, func))
+            elif (func.cls and "Engine" in func.cls
+                  and func.name in _ENGINE_HOT):
+                out.extend(self._check_engine(model, func))
+        return out
+
+    def _check_traced(self, model: ModuleModel, func: Func) -> Iterator:
+        taint = Taint(model, func)
+        for stmt in func.own_statements():
+            for node in _stmt_exprs(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                target = model.resolve(node.func)
+                if target in _SYNC_CALLS:
+                    yield model.finding(
+                        self.id, node,
+                        f"{target.split('.')[-1]}() inside traced code — "
+                        "host transfer during trace/execution of the step "
+                        "program")
+                elif target in ("numpy.asarray", "numpy.array") and \
+                        node.args and taint.tainted(node.args[0]):
+                    yield model.finding(
+                        self.id, node,
+                        "np.asarray/np.array on a traced value — implicit "
+                        "device→host transfer inside the step program")
+                elif target == "float" and node.args and \
+                        taint.tainted(node.args[0]):
+                    yield model.finding(
+                        self.id, node,
+                        "float() on a traced value inside traced code — "
+                        "blocking device sync / concretization")
+                elif isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "item" and not node.args and \
+                        taint.tainted(node.func.value):
+                    yield model.finding(
+                        self.id, node,
+                        ".item() on a traced value inside traced code — "
+                        "blocking device sync")
+            taint.advance(stmt)
+
+    def _check_hook(self, model: ModuleModel, func: Func) -> Iterator:
+        params = func.params()
+        # protocol: on_step_end(self, ctx, ev) — bind by position so
+        # renamed parameters are still covered
+        ctx_name = params[1] if len(params) > 1 else "ctx"
+        ev_name = params[2] if len(params) > 2 else "ev"
+
+        def device_rooted(node: ast.AST) -> bool:
+            root = _root_chain(node)
+            if root is None:
+                return False
+            base, first = root
+            if base == ev_name:
+                return True
+            return base == ctx_name and first in ("params", "opt_state")
+
+        for node in func.own_nodes():
+            if not isinstance(node, ast.Call):
+                continue
+            target = model.resolve(node.func)
+            if target in _SYNC_CALLS:
+                yield model.finding(
+                    self.id, node,
+                    f"{target.split('.')[-1]}() in on_step_end — blocking "
+                    "host sync on the per-step hook path; move the "
+                    "transfer to the runner's single bundled per-step "
+                    "device_get")
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item" and not node.args:
+                yield model.finding(
+                    self.id, node,
+                    ".item() in on_step_end — blocking per-step host sync")
+            elif target in ("float", "int", "numpy.asarray",
+                            "numpy.array") and node.args and \
+                    device_rooted(node.args[0]):
+                yield model.finding(
+                    self.id, node,
+                    f"{target.split('.')[-1]}() on `{ev_name}.*`/"
+                    f"`{ctx_name}.params`-rooted value in on_step_end — "
+                    "StepEvent carries host scalars (runner does one "
+                    "bundled transfer per step); coercing here is a sync "
+                    "on device values and redundant on host ones")
+
+    def _check_engine(self, model: ModuleModel, func: Func) -> Iterator:
+        for node in func.own_nodes():
+            if not isinstance(node, ast.Call):
+                continue
+            target = model.resolve(node.func)
+            if target in _SYNC_CALLS:
+                yield model.finding(
+                    self.id, node,
+                    f"{target.split('.')[-1]}() in {func.qualname} — the "
+                    "decode loop syncs once per chunk boundary only; "
+                    "suppress deliberately if this IS that sync")
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item" and not node.args:
+                yield model.finding(
+                    self.id, node,
+                    f".item() in {func.qualname} — per-token host sync in "
+                    "the decode loop")
+
+
+def _root_chain(node: ast.AST) -> Optional[tuple]:
+    """(base name, first attribute) of an expression rooted at a name,
+    descending through attribute/subscript/call chains:
+    ``ev.metrics.get("x")`` -> ("ev", "metrics")."""
+    first = None
+    while True:
+        if isinstance(node, ast.Call):
+            node = node.func
+        elif isinstance(node, ast.Attribute):
+            first = node.attr
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Name):
+            return node.id, first
+        else:
+            return None
+
+
+# --------------------------------------------------------------------------
+# R3 — donated-buffer safety
+# --------------------------------------------------------------------------
+
+
+class DonationSafety:
+    """Reading a buffer after passing it to a jitted call that donates
+    that argument: the callee may have reused the storage, so the read
+    returns garbage or raises — the PR 3 fault-policy flaw class.  The
+    analysis is module-local and source-ordered: a donated name is dead
+    from the donating call until rebound (binding the call's own result
+    to the same name, the ``x, .. = f(x, ..)`` idiom, is the fix)."""
+
+    id = "R3"
+    title = "donation-safety"
+    invariant = ("no use of a buffer after it was donated to a jitted "
+                 "call (rebind from the call's results)")
+
+    def check(self, model: ModuleModel) -> list:
+        donors = self._collect_donors(model)
+        out = []
+        for func in model.funcs:
+            out.extend(self._check_func(model, func, donors))
+        return out
+
+    @staticmethod
+    def _collect_donors(model: ModuleModel) -> dict:
+        """dotted callable name -> set of donated positional indices."""
+        donors: dict[str, set] = {}
+        for node in ast.walk(model.tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            call = node.value
+            if not (isinstance(call, ast.Call)
+                    and model.resolve(call.func) == "jax.jit"):
+                continue
+            donated = _donated_positions(call)
+            if not donated:
+                continue
+            for t in node.targets:
+                d = dotted(t)
+                if d:
+                    donors[d] = donated
+        return donors
+
+    def _check_func(self, model: ModuleModel, func: Func,
+                    donors: dict) -> Iterator:
+        dead: dict[str, str] = {}   # donated name -> callee it died in
+        for stmt in func.own_statements():
+            # 1) reads of already-dead names
+            for node in _stmt_exprs(stmt):
+                if not isinstance(node, (ast.Name, ast.Attribute)):
+                    continue
+                if not isinstance(getattr(node, "ctx", None), ast.Load):
+                    continue
+                d = dotted(node)
+                if d in dead:
+                    yield model.finding(
+                        self.id, node,
+                        f"`{d}` read after being donated to "
+                        f"`{dead[d]}` — the donated buffer may have been "
+                        "reused; rebind it from the call's results")
+                    dead.pop(d, None)
+            # 2) new donations in this statement
+            targets = _assigned_dotted(stmt)
+            for node in _stmt_exprs(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee, donated = self._donation_of(model, node, donors)
+                if not donated:
+                    continue
+                for i in donated:
+                    if i < len(node.args):
+                        d = dotted(node.args[i])
+                        if d and d not in targets:
+                            dead[d] = callee
+            # 3) rebinding resurrects
+            for d in targets:
+                dead.pop(d, None)
+
+    @staticmethod
+    def _donation_of(model: ModuleModel, call: ast.Call,
+                     donors: dict) -> tuple:
+        d = dotted(call.func)
+        if d in donors:
+            return d, donors[d]
+        # immediate-call form: jax.jit(f, donate_argnums=..)(args)
+        if isinstance(call.func, ast.Call) and \
+                model.resolve(call.func.func) == "jax.jit":
+            donated = _donated_positions(call.func)
+            if donated:
+                return "jax.jit(...)", donated
+        return None, set()
+
+
+def _donated_positions(jit_call: ast.Call) -> set:
+    out: set = set()
+    for kw in jit_call.keywords:
+        if kw.arg == "donate_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    out.add(n.value)
+    return out
+
+
+def _assigned_dotted(stmt: ast.stmt) -> set:
+    out: set = set()
+    targets: list = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, ast.For):
+        targets = [stmt.target]
+    for t in targets:
+        for node in ast.walk(t):
+            d = dotted(node)
+            if d:
+                out.add(d)
+    return out
+
+
+# --------------------------------------------------------------------------
+# R4 — Pallas kernel hygiene
+# --------------------------------------------------------------------------
+
+
+class PallasHygiene:
+    """Kernel-call hygiene: no ``interpret=True`` left on in production
+    code (CPU interpreter masquerading as the TPU path), grids derived by
+    floor division must assert divisibility (a silently truncated grid
+    skips tail elements), and SMEM holds scalars/vectors only (matrix
+    tiles belong in VMEM)."""
+
+    id = "R4"
+    title = "pallas-hygiene"
+    invariant = ("kernel launches are exact (divisibility asserted), "
+                 "production-mode (no interpret=True), and SMEM-sane")
+
+    def check(self, model: ModuleModel) -> list:
+        out = []
+        if not model.is_test:
+            for node in ast.walk(model.tree):
+                if isinstance(node, ast.Call):
+                    for kw in node.keywords:
+                        if kw.arg == "interpret" and \
+                                isinstance(kw.value, ast.Constant) and \
+                                kw.value.value is True:
+                            out.append(model.finding(
+                                self.id, kw.value,
+                                "literal interpret=True outside tests — "
+                                "the Pallas interpreter is a test/debug "
+                                "mode; thread a flag instead"))
+        for func in model.funcs:
+            out.extend(self._check_grids(model, func))
+        out.extend(self._check_smem(model))
+        return out
+
+    def _check_grids(self, model: ModuleModel, func: Func) -> Iterator:
+        calls = [n for n in func.own_nodes() if isinstance(n, ast.Call)
+                 and model.resolve(n.func) is not None
+                 and model.resolve(n.func).endswith(".pallas_call")]
+        if not calls:
+            return
+        has_div_assert = self._has_divisibility_assert(func)
+        for call in calls:
+            grid_exprs = self._grid_exprs(model, func, call)
+            for expr in grid_exprs:
+                if self._has_floordiv(func, expr) and not has_div_assert:
+                    yield model.finding(
+                        self.id, expr,
+                        "pallas_call grid derived by floor division "
+                        "without a divisibility assert in this function — "
+                        "a non-multiple shape silently drops the tail "
+                        "block (assert `x % block == 0` or pad first)")
+
+    def _grid_exprs(self, model: ModuleModel, func: Func,
+                    call: ast.Call) -> list:
+        out = []
+        for kw in call.keywords:
+            if kw.arg == "grid":
+                out.append(kw.value)
+            elif kw.arg == "grid_spec":
+                spec = self._resolve_local(func, kw.value)
+                if isinstance(spec, ast.Call):
+                    for skw in spec.keywords:
+                        if skw.arg == "grid":
+                            out.append(skw.value)
+        return out
+
+    def _has_floordiv(self, func: Func, expr: ast.AST) -> bool:
+        expr = self._resolve_local(func, expr) or expr
+        for node in ast.walk(expr):
+            if isinstance(node, ast.BinOp) and \
+                    isinstance(node.op, ast.FloorDiv):
+                return True
+            # elements of a grid tuple may themselves be local names
+            if isinstance(node, ast.Name) and node is not expr:
+                rhs = self._lookup_assign(func, node.id)
+                if rhs is not None and any(
+                        isinstance(n, ast.BinOp)
+                        and isinstance(n.op, ast.FloorDiv)
+                        for n in ast.walk(rhs)):
+                    return True
+        return False
+
+    def _resolve_local(self, func: Func, expr: ast.AST):
+        if isinstance(expr, ast.Name):
+            return self._lookup_assign(func, expr.id)
+        return expr
+
+    @staticmethod
+    def _lookup_assign(func: Func, name: str):
+        rhs = None
+        for stmt in func.own_statements():
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name) and n.id == name:
+                            rhs = stmt.value
+        return rhs
+
+    @staticmethod
+    def _has_divisibility_assert(func: Func) -> bool:
+        for stmt in func.own_statements():
+            if isinstance(stmt, ast.Assert):
+                for n in ast.walk(stmt.test):
+                    if isinstance(n, ast.BinOp) and \
+                            isinstance(n.op, ast.Mod):
+                        return True
+        return False
+
+    def _check_smem(self, model: ModuleModel) -> Iterator:
+        for node in ast.walk(model.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = model.resolve(node.func)
+            if target is None:
+                continue
+            if target.endswith("pallas.tpu.SMEM") and node.args and \
+                    isinstance(node.args[0], ast.Tuple) and \
+                    len(node.args[0].elts) > 1:
+                yield model.finding(
+                    self.id, node,
+                    "multi-dimensional SMEM scratch — SMEM is the scalar "
+                    "memory; matrix tiles belong in pltpu.VMEM")
+            elif target.endswith(".BlockSpec"):
+                is_smem = any(
+                    kw.arg == "memory_space"
+                    and (model.resolve(kw.value) or "").endswith("SMEM")
+                    for kw in node.keywords)
+                if is_smem and node.args and \
+                        isinstance(node.args[0], ast.Tuple) and \
+                        len(node.args[0].elts) > 1:
+                    yield model.finding(
+                        self.id, node,
+                        "multi-dimensional BlockSpec in SMEM — scalar "
+                        "operands only (use VMEM for tiles)")
+
+
+# --------------------------------------------------------------------------
+# R5 — impurity inside traced code
+# --------------------------------------------------------------------------
+
+_IMPURE_EXACT = {
+    "time.time": "wall-clock read",
+    "time.perf_counter": "wall-clock read",
+    "time.monotonic": "wall-clock read",
+    "time.sleep": "host sleep",
+    "datetime.datetime.now": "wall-clock read",
+    "print": "host I/O (use jax.debug.print)",
+    "open": "host I/O",
+    "input": "host I/O",
+}
+_IMPURE_PREFIX = {
+    "numpy.random.": "host RNG (use jax.random with an explicit key)",
+    "random.": "host RNG (use jax.random with an explicit key)",
+}
+
+
+class TracedImpurity:
+    """Side effects inside traced code execute once at trace time and
+    never again (or at recompile, non-deterministically) — wall-clock
+    reads, host RNG, I/O and global mutation silently freeze into the
+    compiled program and break bitwise resume."""
+
+    id = "R5"
+    title = "traced-impurity"
+    invariant = ("traced code is pure: no host RNG, clocks, I/O or "
+                 "global mutation baked into the compiled program")
+
+    def check(self, model: ModuleModel) -> list:
+        out = []
+        for func in model.funcs:
+            if not func.traced:
+                continue
+            for stmt in func.own_statements():
+                if isinstance(stmt, ast.Global):
+                    out.append(model.finding(
+                        self.id, stmt,
+                        "`global` mutation inside traced code — the "
+                        "side effect happens once at trace time, not "
+                        "per step"))
+            for node in func.own_nodes():
+                if not isinstance(node, ast.Call):
+                    continue
+                target = model.resolve(node.func)
+                if target is None:
+                    continue
+                why = _IMPURE_EXACT.get(target)
+                if why is None:
+                    for prefix, reason in _IMPURE_PREFIX.items():
+                        if target.startswith(prefix):
+                            why = reason
+                            break
+                if why is not None:
+                    out.append(model.finding(
+                        self.id, node,
+                        f"{target}() inside traced code — {why}; the "
+                        "value freezes at trace time and breaks "
+                        "bitwise-reproducible steps"))
+        return out
+
+
+# --------------------------------------------------------------------------
+# R6 — RunSpec serialization drift
+# --------------------------------------------------------------------------
+
+
+class SpecDrift:
+    """Every RunSpec field must round-trip: nested dataclass fields must
+    be re-hydrated in ``from_dict`` and every field must be constructible
+    from ``from_cli_args`` — a field added to the dataclass but not the
+    (de)serializers silently drops config on spec replay, which breaks
+    the spec-addressed artifact contract."""
+
+    id = "R6"
+    title = "spec-drift"
+    invariant = ("RunSpec fields round-trip through to_json/from_json "
+                 "and are reachable from the CLI")
+
+    def check(self, model: ModuleModel) -> list:
+        spec_cls = None
+        for node in ast.walk(model.tree):
+            if isinstance(node, ast.ClassDef) and node.name == "RunSpec":
+                if self._is_dataclass(model, node):
+                    spec_cls = node
+                break
+        if spec_cls is None:
+            return []
+        out = []
+        dataclass_names = self._module_dataclasses(model)
+        fields = self._fields(spec_cls)
+        nested = {name: ann for name, ann in fields.items()
+                  if self._nested_dataclass(ann, dataclass_names)}
+
+        from_dict = self._method(spec_cls, "from_dict")
+        if from_dict is not None:
+            mentioned = _str_constants(from_dict)
+            for name in nested:
+                if name not in mentioned:
+                    out.append(model.finding(
+                        self.id, self._field_node(spec_cls, name),
+                        f"nested field `{name}` is not re-hydrated in "
+                        "RunSpec.from_dict — from_json would return a "
+                        "plain dict for it (lossy round-trip)"))
+
+        to_dict = self._method(spec_cls, "to_dict")
+        if to_dict is not None and not self._uses_asdict(model, to_dict):
+            mentioned = _str_constants(to_dict)
+            for name in fields:
+                if name not in mentioned:
+                    out.append(model.finding(
+                        self.id, self._field_node(spec_cls, name),
+                        f"field `{name}` missing from hand-rolled "
+                        "RunSpec.to_dict — to_json drops it"))
+
+        cli = None
+        for f in model.funcs:
+            if f.name == "from_cli_args" and f.parent is None and \
+                    f.cls is None:
+                cli = f
+        if cli is not None:
+            kwargs = self._spec_ctor_kwargs(cli)
+            if kwargs is not None:
+                for name in fields:
+                    if name not in kwargs:
+                        out.append(model.finding(
+                            self.id, self._field_node(spec_cls, name),
+                            f"field `{name}` is never passed by "
+                            "from_cli_args — the CLI cannot express it "
+                            "(wire a flag or construct it explicitly)"))
+        return out
+
+    @staticmethod
+    def _is_dataclass(model: ModuleModel, node: ast.ClassDef) -> bool:
+        for deco in node.decorator_list:
+            target = model.resolve(deco.func if isinstance(deco, ast.Call)
+                                   else deco)
+            if target and target.endswith("dataclass"):
+                return True
+        return False
+
+    def _module_dataclasses(self, model: ModuleModel) -> set:
+        out = set()
+        for node in ast.walk(model.tree):
+            if isinstance(node, ast.ClassDef) and \
+                    self._is_dataclass(model, node):
+                out.add(node.name)
+        return out
+
+    @staticmethod
+    def _fields(cls: ast.ClassDef) -> dict:
+        out = {}
+        for stmt in cls.body:
+            if isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name):
+                ann_names = {n.id for n in ast.walk(stmt.annotation)
+                             if isinstance(n, ast.Name)}
+                if "ClassVar" in ann_names:
+                    continue
+                out[stmt.target.id] = ann_names
+        return out
+
+    @staticmethod
+    def _nested_dataclass(ann_names: set, dataclass_names: set) -> bool:
+        if ann_names & dataclass_names:
+            return True
+        # imported spec/config types follow the *Spec/*Config convention
+        return any(n.endswith("Spec") or n.endswith("Config")
+                   for n in ann_names)
+
+    @staticmethod
+    def _method(cls: ast.ClassDef, name: str):
+        for stmt in cls.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and stmt.name == name:
+                return stmt
+        return None
+
+    @staticmethod
+    def _field_node(cls: ast.ClassDef, name: str) -> ast.AST:
+        for stmt in cls.body:
+            if isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name) and \
+                    stmt.target.id == name:
+                return stmt
+        return cls
+
+    @staticmethod
+    def _uses_asdict(model: ModuleModel, fn: ast.AST) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                target = model.resolve(node.func)
+                if target and target.endswith("asdict"):
+                    return True
+        return False
+
+    @staticmethod
+    def _spec_ctor_kwargs(cli) -> Optional[set]:
+        """Keyword names of the RunSpec(...) construction in the CLI
+        builder (the call with the most keywords wins, covering helper
+        locals)."""
+        best = None
+        for node in cli.own_nodes():
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in ("RunSpec", "cls"):
+                kwargs = {kw.arg for kw in node.keywords if kw.arg}
+                if best is None or len(kwargs) > len(best):
+                    best = kwargs
+        return best
+
+
+# --------------------------------------------------------------------------
+
+
+def _str_constants(node: ast.AST) -> set:
+    return {n.value for n in ast.walk(node)
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)}
+
+
+ALL_RULES = (RecompileHazard(), HostSyncInHotPath(), DonationSafety(),
+             PallasHygiene(), TracedImpurity(), SpecDrift())
+
+RULES_BY_ID = {r.id: r for r in ALL_RULES}

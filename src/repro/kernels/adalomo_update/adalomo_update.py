@@ -69,6 +69,8 @@ def stats_pallas(grad, r, c, *, beta, eps_stat, block=DEFAULT_BLOCK,
                  interpret=False):
     m, n = grad.shape
     bm, bn = min(block[0], m), min(block[1], n)
+    assert m % bm == 0 and n % bn == 0, (
+        f"grad shape {(m, n)} not a multiple of block {(bm, bn)}")
     grid = (m // bm, n // bn)
     scal = jnp.array([beta, eps_stat], jnp.float32)
     return pl.pallas_call(
@@ -137,6 +139,8 @@ def update_pallas(param, grad, r_new, c_new, *, lr, inv_denom_corr,
                   block=DEFAULT_BLOCK, interpret=False):
     m, n = param.shape
     bm, bn = min(block[0], m), min(block[1], n)
+    assert m % bm == 0 and n % bn == 0, (
+        f"param shape {(m, n)} not a multiple of block {(bm, bn)}")
     grid = (2, m // bm, n // bn)
     scal = jnp.array([inv_denom_corr, eps_div, lr, clip, eps_rms,
                       float(n_elems), 1.0 if literal else 0.0, decay],

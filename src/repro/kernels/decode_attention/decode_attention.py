@@ -177,6 +177,7 @@ def decode_attention_pallas(q, k_cache, v_cache, kv_pos, q_pos, *,
         v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
         kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
     Wp = W + pad
+    assert Wp % bw == 0, f"padded window {Wp} not a multiple of {bw}"
     nw = Wp // bw
 
     qg = q.reshape(B, K, G, dh)

@@ -220,8 +220,10 @@ def make_fused_train_step(cfg: EncDecConfig, opt):
 
         # ---- backward + inline updates ----
         g_outer_epi, dxd = epi_vjp(jnp.ones_like(loss))
-        gc_dec = grad_constraint("dec") if grad_constraint else None
-        gc_enc = grad_constraint("enc") if grad_constraint else None
+        gc_dec = grad_constraint("dec") if grad_constraint is not None \
+            else None
+        gc_enc = grad_constraint("enc") if grad_constraint is not None \
+            else None
         dxd0, (_, d_enc_out), new_dec, new_dec_m = F.stack_backward_update(
             dec_body, rule, stacks["dec"], m["stacks"]["dec"],
             ((), enc_out), dec_res, dxd, labels=labels["stacks"]["dec"],

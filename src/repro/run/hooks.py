@@ -44,9 +44,12 @@ from repro.train.fault import Heartbeat, StragglerMonitor
 
 @dataclasses.dataclass
 class StepEvent:
-    """What ``on_step_end`` sees: the 0-based step index, device scalars
-    (loss, metrics dict), the hparams pytree the step ran with, and the
-    host wall-clock seconds since the previous step."""
+    """What ``on_step_end`` sees: the 0-based step index, **host** scalars
+    (loss, metrics dict, hparams pytree — the runner performs ONE bundled
+    ``jax.device_get`` per step and converts scalar leaves to Python
+    floats before dispatch), and the host wall-clock seconds since the
+    previous step.  Hooks must never sync on a device value themselves —
+    that is repro-lint rule R2."""
 
     step: int
     loss: Any
@@ -88,9 +91,9 @@ class HistoryHook(Hook):
 
     def on_step_end(self, ctx, ev: StepEvent) -> None:
         self.history["step"].append(ev.step)
-        self.history["loss"].append(float(ev.loss))
-        self.history["accuracy"].append(float(ev.metrics["accuracy"]))
-        self.history["lr"].append(float(ev.hparams["lr"]))
+        self.history["loss"].append(ev.loss)
+        self.history["accuracy"].append(ev.metrics["accuracy"])
+        self.history["lr"].append(ev.hparams["lr"])
 
     def on_eval(self, ctx, step: int, metrics: dict) -> None:
         self.history["eval_loss"].append(metrics["loss"])
@@ -116,9 +119,9 @@ class LoggingHook(Hook):
     def on_step_end(self, ctx, ev: StepEvent) -> None:
         last = self.total is not None and ev.step == self.total - 1
         if self.every and (ev.step % self.every == 0 or last):
-            self.log(f"step {ev.step:5d} loss {float(ev.loss):.4f} "
-                     f"acc {float(ev.metrics['accuracy']):.3f} "
-                     f"lr {float(ev.hparams['lr']):.2e} "
+            self.log(f"step {ev.step:5d} loss {ev.loss:.4f} "
+                     f"acc {ev.metrics['accuracy']:.3f} "
+                     f"lr {ev.hparams['lr']:.2e} "
                      f"({ev.dt*1e3:.0f} ms)")
 
     def on_eval(self, ctx, step: int, metrics: dict) -> None:
@@ -199,9 +202,9 @@ class MetricsHook(Hook):
     def on_step_end(self, ctx, ev: StepEvent) -> None:
         if ev.step % self.every:
             return
-        ntok = float(ev.metrics.get("ntokens", 0.0))
-        rec = {"step": ev.step, "loss": float(ev.loss),
-               "lr": float(ev.hparams["lr"]), "dt_s": ev.dt,
+        ntok = ev.metrics.get("ntokens", 0.0)
+        rec = {"step": ev.step, "loss": ev.loss,
+               "lr": ev.hparams["lr"], "dt_s": ev.dt,
                "ntokens": ntok,
                "tokens_per_s": (ntok / ev.dt) if ev.dt > 0 else 0.0}
         if self._slot_tokens:

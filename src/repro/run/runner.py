@@ -31,6 +31,19 @@ from repro.run.program import StepProgram, build_step_program
 from repro.run.spec import RunSpec
 
 
+def _host_scalars(tree):
+    """Convert the per-step observables (already on host via one bundled
+    ``jax.device_get``) to plain Python floats; non-scalar leaves pass
+    through as numpy arrays."""
+    def conv(x):
+        if isinstance(x, (bool, int, float)) or x is None:
+            return x
+        if getattr(x, "ndim", None) == 0:
+            return float(x)
+        return x
+    return jax.tree.map(conv, tree)
+
+
 def _retriable_errors() -> tuple:
     """Transient device-side failures worth a checkpoint-restore retry
     (preempted TPU, ICI link flap)."""
@@ -258,8 +271,14 @@ def run(spec: RunSpec, *, arch=None, program: Optional[StepProgram] = None,
                 t_last = time.time()
                 continue
             now = time.time()
-            ev = hooks_lib.StepEvent(step=step, loss=loss, metrics=metrics,
-                                     hparams=hp, dt=now - t_last)
+            # The ONE device->host sync of the step loop: hooks receive
+            # plain host scalars (the StepEvent contract) so none of them
+            # ever blocks on a device value again (repro-lint R2).
+            loss_h, metrics_h, hp_h = _host_scalars(
+                jax.device_get((loss, metrics, hp)))
+            ev = hooks_lib.StepEvent(step=step, loss=loss_h,
+                                     metrics=metrics_h,
+                                     hparams=hp_h, dt=now - t_last)
             t_last = now
             for h in pipeline:
                 h.on_step_end(ctx, ev)

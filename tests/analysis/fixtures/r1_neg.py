@@ -1,0 +1,29 @@
+"""R1 negative fixture: static shape/metadata branching is fine."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branch_on_shape(x):
+    if x.ndim > 1:                  # static metadata — trace-time Python
+        x = x.reshape(-1)
+    if len(x.shape) == 1:
+        pass
+    return jnp.where(x > 0, x, -x)  # value select stays on device
+
+
+@jax.jit
+def identity_test(x, mask=None):
+    out = x * mask if mask is not None else x   # identity test is static
+    return out
+
+
+def _fn(x, cfg):
+    return x * len(cfg)
+
+
+jitted = jax.jit(_fn, static_argnums=(1,))
+
+
+def caller(x):
+    return jitted(x, (1, 2, 3))     # hashable tuple static arg

@@ -1,0 +1,31 @@
+"""R1 positive fixture: recompile hazards inside traced code."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branch_on_value(x):
+    if x > 0:                       # R1: Python branch on traced value
+        return x
+    return -x
+
+
+@jax.jit
+def format_value(x):
+    return f"loss={x}"              # R1: f-string on traced value
+
+
+@jax.jit
+def concretize(x):
+    return jnp.zeros(int(x.sum()))  # R1: int() on traced value
+
+
+def _fn(x, cfg):
+    return x * len(cfg)
+
+
+jitted = jax.jit(_fn, static_argnums=(1,))
+
+
+def caller(x):
+    return jitted(x, [1, 2, 3])     # R1: unhashable literal static arg

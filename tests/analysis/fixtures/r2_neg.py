@@ -1,0 +1,23 @@
+"""R2 negative fixture: host-side coercions of host values are fine."""
+import jax
+import jax.numpy as jnp
+
+
+class CollectHook:
+    def __init__(self):
+        self.losses = []
+
+    def on_step_end(self, ctx, ev):
+        self.losses.append(ev.loss)                 # host scalar, no sync
+        frac = float(len(self.losses)) / 10.0       # host int — fine
+        del frac
+
+
+@jax.jit
+def step(x):
+    return jnp.sum(x)                               # stays on device
+
+
+def driver(xs):
+    # float() outside any hot context is not R2's business
+    return [float(x) for x in xs]

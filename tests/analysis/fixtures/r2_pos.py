@@ -1,0 +1,26 @@
+"""R2 positive fixture: host syncs in hot paths."""
+import jax
+import numpy as np
+
+
+class CollectHook:
+    def __init__(self):
+        self.losses = []
+
+    def on_step_end(self, ctx, ev):
+        self.losses.append(float(ev.loss))          # R2: sync in hook
+
+
+@jax.jit
+def step(x):
+    return float(jax.numpy.sum(x))                  # R2: sync in traced
+
+
+@jax.jit
+def to_host(x):
+    return np.asarray(jax.numpy.exp(x))             # R2: implicit transfer
+
+
+class ToyEngine:
+    def step(self):
+        return self._state.item()                   # R2: per-token sync

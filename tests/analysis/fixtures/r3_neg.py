@@ -1,0 +1,21 @@
+"""R3 negative fixture: same-statement rebind is the safe idiom."""
+import jax
+
+step = jax.jit(lambda s, b: (s + b, s.sum()), donate_argnums=(0,))
+
+
+def loop(state, batches):
+    losses = []
+    for b in batches:
+        state, loss = step(state, b)    # rebinds the donated name
+        losses.append(loss)
+    return state, losses
+
+
+class Trainer:
+    def __init__(self):
+        self._step = jax.jit(lambda s, b: s + b, donate_argnums=(0,))
+
+    def run(self, batch):
+        self._state = self._step(self._state, batch)   # same-stmt rebind
+        return self._state

@@ -1,0 +1,23 @@
+"""R3 positive fixture: use-after-donation."""
+import jax
+
+step = jax.jit(lambda s, b: (s + b, s.sum()), donate_argnums=(0,))
+
+
+def loop(state, batches):
+    for b in batches:
+        new_state, loss = step(state, b)
+        check = state.mean()        # R3: donated buffer read after call
+        state = new_state
+    return state, check
+
+
+class Trainer:
+    def __init__(self):
+        self._step = jax.jit(lambda s, b: s + b, donate_argnums=(0,))
+
+    def run(self, batch):
+        out = self._step(self._state, batch)
+        stale = self._state + 1     # R3: self._state was donated
+        self._state = out
+        return stale

@@ -1,0 +1,27 @@
+"""R4 negative fixture: asserted grids, flag-threaded interpret, scalar
+SMEM."""
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(s_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...] * s_ref[0]
+
+
+def launch(x, block=128, interpret=False):
+    m, n = x.shape
+    assert m % block == 0 and n % block == 0
+    grid = (m // block, n // block)
+    scal = jnp.array([2.0], jnp.float32)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((block, block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.SMEM((2,), jnp.float32)],
+        interpret=interpret,            # threaded flag, not a literal
+    )(scal, x)

@@ -1,0 +1,37 @@
+"""R4 positive fixture: Pallas hygiene violations."""
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def launch_truncating(x, block=128):
+    m, n = x.shape
+    grid = (m // block, n // block)     # R4: floordiv, no assert
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+    )(x)
+
+
+def launch_debug(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,                 # R4: interpreter left on
+    )(x)
+
+
+def launch_matrix_smem(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.SMEM((8, 128), jnp.float32)],  # R4: tile
+    )(x)

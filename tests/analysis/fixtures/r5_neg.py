@@ -1,0 +1,16 @@
+"""R5 negative fixture: clocks/RNG on the host side, keys on device."""
+import time
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def pure_step(x, key):
+    noise = jax.random.normal(key, x.shape)     # explicit key — pure
+    return x + noise
+
+
+def timed_driver(x, key):
+    t0 = time.time()                            # host code: fine
+    out = pure_step(x, key)
+    return out, time.time() - t0

@@ -1,0 +1,30 @@
+"""R5 positive fixture: impurity baked into traced code."""
+import time
+import random
+import jax
+import numpy as np
+
+_CALLS = 0
+
+
+@jax.jit
+def stamped_step(x):
+    t0 = time.time()                    # R5: wall clock freezes at trace
+    return x * t0
+
+
+@jax.jit
+def noisy_step(x):
+    return x + np.random.rand()         # R5: host RNG, one sample ever
+
+
+@jax.jit
+def jittered(x):
+    return x * random.random()          # R5: stdlib RNG
+
+
+@jax.jit
+def counted(x):
+    global _CALLS                       # R5: global mutation
+    _CALLS += 1
+    return x

@@ -1,0 +1,29 @@
+"""R6 negative fixture: every field round-trips."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    path: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    steps: int = 0
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    new_knob: float = 0.0
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d):
+        d = dict(d)
+        d["data"] = DataSpec(**d.get("data", {}))
+        return cls(**d)
+
+
+def from_cli_args(args):
+    return RunSpec(steps=args.steps,
+                   data=DataSpec(path=args.data),
+                   new_knob=args.new_knob)

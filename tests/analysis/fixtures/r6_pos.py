@@ -1,0 +1,29 @@
+"""R6 positive fixture: RunSpec fields drifting out of the
+(de)serializers."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    path: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    steps: int = 0
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    new_knob: float = 0.0
+
+    def to_dict(self):
+        # hand-rolled and missing new_knob  -> R6
+        return {"steps": self.steps, "data": {"path": self.data.path}}
+
+    @classmethod
+    def from_dict(cls, d):
+        # nested `data` never re-hydrated   -> R6
+        return cls(**dict(d))
+
+
+def from_cli_args(args):
+    # new_knob unreachable from the CLI     -> R6
+    return RunSpec(steps=args.steps, data=DataSpec(path=args.data))

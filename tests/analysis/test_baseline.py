@@ -1,0 +1,86 @@
+"""Baseline semantics + the no-silent-drift regression: the committed
+baseline must exactly match a fresh run over the linted tree."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import baseline
+from repro.analysis.core import Finding
+
+pytestmark = pytest.mark.analysis
+
+REPO = Path(__file__).resolve().parents[2]
+
+
+def mk_finding(rule="R2", path="src/repro/x.py", context="f",
+               line_text="float(x)", line=10):
+    return Finding(rule=rule, path=path, line=line, col=0,
+                   message="m", context=context, line_text=line_text)
+
+
+def mk_entry(**kw):
+    base = dict(rule="R2", path="src/repro/x.py", context="f",
+                line_text="float(x)", justification="because")
+    base.update(kw)
+    return baseline.BaselineEntry(**base)
+
+
+def test_entry_matches_ignoring_line_number():
+    assert mk_entry().matches(mk_finding(line=10))
+    assert mk_entry().matches(mk_finding(line=999))
+
+
+def test_entry_suffix_path_matching():
+    assert mk_entry(path="repro/x.py").matches(mk_finding())
+    assert mk_entry(path="x.py").matches(mk_finding())
+    assert not mk_entry(path="y.py").matches(mk_finding())
+    # suffix is component-wise, not substring
+    assert not mk_entry(path="o/x.py").matches(mk_finding())
+
+
+def test_apply_splits_new_and_stale():
+    new, stale = baseline.apply(
+        [mk_finding(), mk_finding(context="g")], [mk_entry()])
+    assert [f.context for f in new] == ["g"]
+    assert stale == []
+    new, stale = baseline.apply([], [mk_entry()])
+    assert new == [] and len(stale) == 1
+
+
+def test_load_rejects_missing_justification(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"version": 1, "entries": [
+        {"rule": "R2", "path": "x.py", "context": "f",
+         "line_text": "float(x)", "justification": "   "}]}))
+    with pytest.raises(baseline.BaselineError, match="justification"):
+        baseline.load(p)
+
+
+def test_load_rejects_bad_schema(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text("[]")
+    with pytest.raises(baseline.BaselineError):
+        baseline.load(p)
+    p.write_text("not json")
+    with pytest.raises(baseline.BaselineError):
+        baseline.load(p)
+
+
+def test_save_stamps_todo_justifications(tmp_path):
+    p = tmp_path / "b.json"
+    baseline.save(p, [mk_finding()])
+    data = json.loads(p.read_text())
+    assert data["entries"][0]["justification"].startswith("TODO")
+
+
+def test_committed_baseline_matches_fresh_run():
+    """No silent drift: linting the tree exactly reproduces the committed
+    baseline — no new findings, no stale entries."""
+    from repro.analysis.lint import lint_paths
+    findings = lint_paths([str(REPO / "src"), str(REPO / "benchmarks")])
+    entries = baseline.load(REPO / baseline.BASELINE_NAME)
+    new, stale = baseline.apply(findings, entries)
+    assert new == [], "un-baselined findings:\n" + "\n".join(
+        f.format() for f in new)
+    assert stale == [], "stale baseline entries: " + repr(stale)

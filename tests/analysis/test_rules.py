@@ -1,0 +1,95 @@
+"""Golden tests: every rule fires on its positive fixture and stays
+quiet on the negative one (the fixture pair is the rule's contract)."""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze_module
+from repro.analysis.rules import ALL_RULES, RULES_BY_ID
+
+pytestmark = pytest.mark.analysis
+
+FIXTURES = Path(__file__).parent / "fixtures"
+
+
+def run_rule(rule_id: str, fixture: str):
+    path = FIXTURES / fixture
+    # is_test=False: fixtures live under tests/ but model production code
+    return analyze_module(str(path), path.read_text(),
+                          rules=[RULES_BY_ID[rule_id]], is_test=False)
+
+
+@pytest.mark.parametrize("rule_id", sorted(RULES_BY_ID))
+def test_rule_fires_on_positive_fixture(rule_id):
+    findings = run_rule(rule_id, f"{rule_id.lower()}_pos.py")
+    assert findings, f"{rule_id} found nothing in its positive fixture"
+    assert all(f.rule == rule_id for f in findings)
+
+
+@pytest.mark.parametrize("rule_id", sorted(RULES_BY_ID))
+def test_rule_quiet_on_negative_fixture(rule_id):
+    findings = run_rule(rule_id, f"{rule_id.lower()}_neg.py")
+    assert findings == [], (
+        f"{rule_id} false positives: "
+        + "; ".join(f.format() for f in findings))
+
+
+def test_rule_ids_are_unique_and_stable():
+    assert sorted(RULES_BY_ID) == ["R1", "R2", "R3", "R4", "R5", "R6"]
+    assert len(ALL_RULES) == len(RULES_BY_ID)
+
+
+# ------------------------------------------------------------- specifics
+
+
+def test_r1_distinguishes_value_from_shape_branch():
+    pos = run_rule("R1", "r1_pos.py")
+    assert any("branch" in f.message for f in pos)
+    assert any("int()" in f.message for f in pos)
+    assert any("static" in f.message for f in pos)   # unhashable literal
+
+
+def test_r2_covers_all_three_hot_contexts():
+    pos = run_rule("R2", "r2_pos.py")
+    contexts = {f.context for f in pos}
+    assert "CollectHook.on_step_end" in contexts      # hook path
+    assert "step" in contexts                         # traced step
+    assert "ToyEngine.step" in contexts               # decode loop
+
+
+def test_r3_reports_the_read_site():
+    pos = run_rule("R3", "r3_pos.py")
+    assert {f.context for f in pos} == {"loop", "Trainer.run"}
+    assert all("donated" in f.message for f in pos)
+
+
+def test_r4_three_violation_kinds():
+    pos = run_rule("R4", "r4_pos.py")
+    msgs = " | ".join(f.message for f in pos)
+    assert "floor division" in msgs
+    assert "interpret=True" in msgs
+    assert "SMEM" in msgs
+
+
+def test_r4_interpret_allowed_in_test_files():
+    path = FIXTURES / "r4_pos.py"
+    findings = analyze_module(str(path), path.read_text(),
+                              rules=[RULES_BY_ID["R4"]], is_test=True)
+    assert not any("interpret" in f.message for f in findings)
+
+
+def test_r5_all_impurity_kinds():
+    pos = run_rule("R5", "r5_pos.py")
+    msgs = " | ".join(f.message for f in pos)
+    assert "time.time" in msgs
+    assert "numpy.random" in msgs
+    assert "random.random" in msgs
+    assert "global" in msgs.lower()
+
+
+def test_r6_names_the_drifted_fields():
+    pos = run_rule("R6", "r6_pos.py")
+    msgs = " | ".join(f.message for f in pos)
+    assert "`data`" in msgs and "from_dict" in msgs
+    assert "`new_knob`" in msgs and "to_dict" in msgs
+    assert "from_cli_args" in msgs

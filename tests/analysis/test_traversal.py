@@ -1,0 +1,207 @@
+"""Traversal-engine edge cases: alias resolution, decorated/nested jitted
+functions, builder-convention tracing, taint escapes, suppressions."""
+import pytest
+
+from repro.analysis import analyze_module
+from repro.analysis.core import ModuleModel
+from repro.analysis.rules import RULES_BY_ID
+
+pytestmark = pytest.mark.analysis
+
+
+def findings(source: str, rule_id: str):
+    return analyze_module("mod.py", source,
+                          rules=[RULES_BY_ID[rule_id]], is_test=False)
+
+
+# ------------------------------------------------------------ alias forms
+
+
+def test_from_import_alias_resolves():
+    src = (
+        "import jax\n"
+        "from jax import numpy as foo\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return float(foo.sum(x))\n"
+    )
+    assert len(findings(src, "R2")) == 1
+
+
+def test_jit_itself_aliased():
+    src = (
+        "from jax import jit as J\n"
+        "@J\n"
+        "def f(x):\n"
+        "    if x > 0:\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    assert len(findings(src, "R1")) == 1
+
+
+def test_numpy_alias_in_traced_code():
+    src = (
+        "import jax\n"
+        "import numpy as np2\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return np2.asarray(x)\n"
+    )
+    assert len(findings(src, "R2")) == 1
+
+
+# ----------------------------------------------- decorated / nested forms
+
+
+def test_functools_partial_jit_decorator_with_static_argnames():
+    src = (
+        "import functools\n"
+        "import jax\n"
+        "@functools.partial(jax.jit, static_argnames=('k',))\n"
+        "def f(x, k):\n"
+        "    if k > 2:\n"          # static arg: fine
+        "        return x\n"
+        "    if x > 0:\n"          # traced arg: R1
+        "        return -x\n"
+        "    return x\n"
+    )
+    out = findings(src, "R1")
+    assert len(out) == 1
+    assert out[0].line == 7
+
+
+def test_nested_def_inside_jitted_function_is_traced():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def outer(x):\n"
+        "    def inner(y):\n"
+        "        return float(y)\n"
+        "    return inner(x)\n"
+    )
+    out = findings(src, "R2")
+    assert [f.context for f in out] == ["outer.inner"]
+
+
+def test_make_builder_closure_is_traced():
+    src = (
+        "import time\n"
+        "def make_step(cfg):\n"
+        "    def step(params, batch):\n"
+        "        return params, time.time()\n"
+        "    return step\n"
+    )
+    out = findings(src, "R5")
+    assert [f.context for f in out] == ["make_step.step"]
+
+
+def test_locally_called_helper_inherits_tracedness():
+    src = (
+        "import jax\n"
+        "import time\n"
+        "def helper(v):\n"
+        "    return v * time.time()\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return helper(x)\n"
+    )
+    out = findings(src, "R5")
+    assert [f.context for f in out] == ["helper"]
+
+
+def test_propagated_callee_params_not_assumed_traced():
+    # helper is called from traced code but with a static Python int —
+    # float() on it is NOT a sync, and the engine must know that.
+    src = (
+        "import jax\n"
+        "def helper(x, n):\n"
+        "    return x / float(n)\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    m, n = x.shape\n"
+        "    return helper(x, m * n)\n"
+    )
+    assert findings(src, "R2") == []
+
+
+# ------------------------------------------------------------ suppression
+
+
+_VIOLATION = (
+    "import jax\n"
+    "@jax.jit\n"
+    "def f(x):\n"
+    "    return float(x){comment}\n"
+)
+
+
+def test_same_line_suppression():
+    src = _VIOLATION.format(comment="  # repro-lint: disable=R2")
+    assert findings(src, "R2") == []
+
+
+def test_line_above_suppression():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    # repro-lint: disable=R2 — proving the comment form works\n"
+        "    return float(x)\n"
+    )
+    assert findings(src, "R2") == []
+
+
+def test_wrong_rule_id_does_not_suppress():
+    src = _VIOLATION.format(comment="  # repro-lint: disable=R5")
+    assert len(findings(src, "R2")) == 1
+
+
+def test_multi_rule_suppression_list():
+    src = _VIOLATION.format(comment="  # repro-lint: disable=R1, R2")
+    assert findings(src, "R2") == []
+
+
+# ------------------------------------------------------------------ taint
+
+
+def test_shape_metadata_escapes_taint():
+    model = ModuleModel("m.py", (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    s = x.shape\n"
+        "    return s\n"
+    ))
+    f = [fn for fn in model.funcs if fn.name == "f"][0]
+    assert f.traced and f.params_traced
+
+
+def test_shadowed_redefinition_both_seeded():
+    # the program.py `one_step` / noqa: F811 pattern: both defs seeded
+    model = ModuleModel("m.py", (
+        "import jax\n"
+        "def one(a):\n"
+        "    return a\n"
+        "def one(a):  # noqa: F811\n"
+        "    return a + 1\n"
+        "g = jax.jit(one)\n"
+    ))
+    assert sum(1 for fn in model.funcs
+               if fn.name == "one" and fn.traced) == 2
+
+
+def test_self_method_tracing_through_jit_member():
+    src = (
+        "import jax\n"
+        "import time\n"
+        "class Engine:\n"
+        "    def __init__(self):\n"
+        "        self._chunk = jax.jit(self._make_fn())\n"
+        "    def _make_fn(self):\n"
+        "        def chunk(state):\n"
+        "            return state * time.time()\n"
+        "        return chunk\n"
+    )
+    out = findings(src, "R5")
+    assert [f.context for f in out] == ["Engine._make_fn.chunk"]
