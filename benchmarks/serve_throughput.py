@@ -9,9 +9,11 @@ prefill re-jit for every distinct padded length — exactly the behaviour
 this benchmark exists to show.
 
 Writes ``benchmarks/artifacts/serve_throughput.json`` with tokens/sec for
-both engines plus compile/preemption counters, and the committed
+both engines plus compile/preemption counters, the serve-gauge telemetry
+stream ``benchmarks/artifacts/serve_gauges.jsonl`` (page-pool / queue /
+time-split samples at every chunk boundary), and the committed
 ``benchmarks/BENCH_serve.json`` baseline (tokens/s + p50/p99 request
-latency on the Poisson workload).
+latency + pool utilization on the Poisson workload).
 
   PYTHONPATH=src python -m benchmarks.serve_throughput [--full]
 """
@@ -28,6 +30,7 @@ from benchmarks.common import tiny_llama, write_bench_json
 from repro.serve.engine import (Engine, PagedEngine, PagedServeConfig,
                                 ServeConfig)
 from repro.serve.scheduler import FINISHED
+from repro.telemetry import read_stream
 
 ART = Path(__file__).parent / "artifacts"
 
@@ -120,11 +123,15 @@ def run(fast: bool = True):
     workload = make_workload(n_req, min_len, max_len, rate)
 
     ps = 16
+    ART.mkdir(exist_ok=True)
+    gauge_stream = ART / "serve_gauges.jsonl"
+    if gauge_stream.exists():
+        gauge_stream.unlink()          # regenerate, don't append forever
     pcfg = PagedServeConfig(
         page_size=ps, max_batch=4, chunk=8, max_new_tokens=max_new,
         max_pages_per_seq=-(-(max_len + max_new) // ps),
         num_pages=2 + 4 * -(-(max_len + max_new) // ps),
-        eos_id=-1)
+        eos_id=-1, telemetry_path=str(gauge_stream))
     paged = PagedEngine(arch, params, pcfg)
     # warmup compiles the bounded shape set: pow2 buckets + the chunk
     paged.warmup([min_len, max_len])
@@ -137,14 +144,27 @@ def run(fast: bool = True):
     legacy.generate([[1] * max_len] * 4)
     res_legacy = _drain_legacy(legacy, workload, batch=4)
 
+    # fold the gauge stream (page-pool pressure over the run) into the
+    # committed baseline — the utilization the throughput was bought at
+    gauges = read_stream(gauge_stream).gauges()
+    util = [g["pool_util"] for g in gauges]
+    pool_utilization = {
+        "final": util[-1] if util else 0.0,
+        "max": max(util, default=0.0),
+        "mean": float(np.mean(util)) if util else 0.0,
+        "samples": len(util),
+        "prefill_s": gauges[-1]["prefill_s"] if gauges else 0.0,
+        "decode_s": gauges[-1]["decode_s"] if gauges else 0.0,
+    }
+
     out = {"config": {"n_requests": n_req, "prompt_len": [min_len, max_len],
                       "max_new_tokens": max_new, "rate_per_s": rate,
                       "arch": f"tiny-llama L{layers} d{d}",
                       "backend": jax.default_backend()},
            "paged": res_paged, "legacy": res_legacy,
+           "pool_utilization": pool_utilization,
            "speedup": res_paged["tokens_per_sec"]
            / res_legacy["tokens_per_sec"]}
-    ART.mkdir(exist_ok=True)
     (ART / "serve_throughput.json").write_text(json.dumps(out, indent=2))
     # committed baseline: the ROADMAP "serve tokens/s" gap
     write_bench_json("serve", out)
@@ -155,6 +175,9 @@ def run(fast: bool = True):
     yield (f"serve/legacy,{1e6 / res_legacy['tokens_per_sec']:.1f},"
            f"{res_legacy['tokens_per_sec']:.1f} tok/s")
     yield f"serve/speedup,0.0,{out['speedup']:.2f}x"
+    yield (f"serve/pool_util,0.0,max={pool_utilization['max']:.3f};"
+           f"mean={pool_utilization['mean']:.3f};"
+           f"samples={pool_utilization['samples']}")
 
 
 if __name__ == "__main__":

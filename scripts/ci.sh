@@ -22,6 +22,10 @@ if [[ "${LINT:-1}" == "1" ]]; then
   # .repro-lint-baseline.json — so a reintroduced donated-buffer reuse,
   # interpret=True, or hot-path host sync breaks CI before any test runs.
   python -m repro.analysis.lint src benchmarks
+  # Telemetry schema stage: every committed BENCH_*.json baseline must
+  # validate against the v1 bench schema (repro.telemetry.schema), so a
+  # half-written or hand-edited artifact fails before any test runs.
+  python -m repro.telemetry.schema benchmarks
 fi
 
 if [[ "${FLEET:-0}" == "1" ]]; then
@@ -41,19 +45,21 @@ if [[ "${FAST:-0}" == "1" ]]; then
   # Run API smoke (tests/run: RunSpec JSON round-trip, a short synthetic
   # run + checkpoint resume through run(), the packed-batch equivalence
   # + fault-recovery rewind proofs, and the jit cache-size proof that
-  # the hook pipeline adds zero steady-state recompiles), and the
-  # segment-packing layout invariants (tests/data) — so an accidental
-  # retrace, run-layer, or packing regression fails in seconds, before
+  # the hook pipeline adds zero steady-state recompiles), the
+  # segment-packing layout invariants (tests/data), and the telemetry
+  # schema / probe / golden-report checks (tests/telemetry) — so an
+  # accidental retrace, run-layer, or packing regression fails in seconds,
+  # before
   # the wider suite runs (which then skips those paths to stay within
   # the single TIMEOUT_S wall-clock bound).
   SECONDS=0
   timeout "$TIMEOUT_S" python -m pytest tests/core/test_api.py tests/run \
-      tests/data -m "not slow" -q
+      tests/data tests/telemetry -m "not slow" -q
   TIMEOUT_S=$((TIMEOUT_S - SECONDS))
   # `timeout 0` would DISABLE the bound entirely — clamp to >= 1s.
   if (( TIMEOUT_S < 1 )); then TIMEOUT_S=1; fi
   ARGS+=(-m "not slow" --ignore=tests/core/test_api.py --ignore=tests/run
-         --ignore=tests/data)
+         --ignore=tests/data --ignore=tests/telemetry)
 fi
 
 exec timeout "$TIMEOUT_S" python -m pytest "${ARGS[@]}" "$@"

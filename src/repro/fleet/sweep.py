@@ -271,15 +271,16 @@ def _member_stats(member: SweepMember) -> dict:
             stats["best_eval_loss"] = min(h["eval_loss"])
     metrics = member.dir / "metrics.jsonl"
     if metrics.exists():
+        # versioned-stream aware (Telemetry v1): the lenient reader skips
+        # the schema header and truncated tails; classify() keeps probe /
+        # gauge records out of the step statistics.
+        from repro.telemetry.schema import classify, iter_data_records
         steps, tps, events, last_loss = [], [], {}, None
-        for line in metrics.read_text().splitlines():
-            try:
-                r = json.loads(line)
-            except ValueError:
-                continue
-            if "event" in r:
+        for r in iter_data_records(metrics.read_text().splitlines()):
+            kind = classify(r)
+            if kind == "event":
                 events[r["event"]] = events.get(r["event"], 0) + 1
-            else:
+            elif kind == "step":
                 steps.append(r["step"])
                 last_loss = r.get("loss", last_loss)
                 if r.get("tokens_per_s"):

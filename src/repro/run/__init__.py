@@ -19,10 +19,12 @@ from repro.run.runner import RunContext, RunResult, run
 from repro.run.spec import (DEFAULT_LRS, CheckpointSpec, EvalSpec,
                             FaultSpec, MeshSpec, ModelSpec, OptSpec,
                             ProfileSpec, RunSpec, StepSpec)
+from repro.telemetry.probes import ObservabilitySpec
 
 __all__ = [
     "RunSpec", "ModelSpec", "OptSpec", "StepSpec", "MeshSpec",
     "CheckpointSpec", "EvalSpec", "FaultSpec", "ProfileSpec",
+    "ObservabilitySpec",
     "DEFAULT_LRS",
     "StepProgram", "build_step_program",
     "Hook", "StepEvent", "HistoryHook", "LoggingHook", "MetricsHook",

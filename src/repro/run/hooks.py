@@ -39,6 +39,7 @@ import time
 from pathlib import Path
 from typing import Any, Callable, Optional
 
+from repro.telemetry.schema import header_record, jsonify
 from repro.train.fault import Heartbeat, StragglerMonitor
 
 
@@ -149,7 +150,18 @@ class MetricsHook(Hook):
     heartbeat stalls and straggler steps annotate themselves here via
     :meth:`annotate` (thread-safe; the heartbeat watchdog fires from its
     own thread), so one JSONL file is the single record of throughput
-    *and* liveness."""
+    *and* liveness.
+
+    Since Telemetry v1 the file is a schema-versioned stream
+    (``repro.telemetry.schema``): it opens with a ``{"schema": 1,
+    "stream": "train"}`` header, and when the run's
+    :class:`~repro.telemetry.probes.ObservabilitySpec` is enabled the
+    optimizer-health scalars arriving in ``ev.metrics["opt_health"]``
+    (already host values — they rode the runner's one bundled transfer)
+    are recorded as ``probe`` records at the spec's cadence.  Headers
+    are never stored in ``records`` — the rewind/fast-forward contract
+    stays step-keyed over data records only — and legacy headerless
+    files still resume cleanly."""
 
     def __init__(self, path, every: int = 1):
         self.path = str(path)
@@ -163,6 +175,7 @@ class MetricsHook(Hook):
         if self._fh is not None:
             self._fh.close()
         self._fh = open(self.path, "w")
+        self._fh.write(json.dumps(header_record("train")) + "\n")
         for r in self.records:
             self._fh.write(json.dumps(r) + "\n")
         self._fh.flush()
@@ -185,21 +198,47 @@ class MetricsHook(Hook):
                         r = json.loads(line)
                     except ValueError:  # crash-truncated last line
                         continue
+                    if "schema" in r:
+                        continue   # header: re-emitted by _rewrite
                     if r.get("step", ctx.start_step) < ctx.start_step:
                         self.records.append(r)
             self._rewrite()
 
-    def annotate(self, kind: str, step: int, **payload) -> None:
-        """Append an event record (liveness signals: heartbeat stalls,
-        straggler steps, preemption) to the JSONL stream."""
-        rec = {"event": kind, "step": int(step), **payload}
+    def _append(self, rec: dict) -> None:
         with self._lock:
             self.records.append(rec)
             if self._fh is not None:
                 self._fh.write(json.dumps(rec) + "\n")
                 self._fh.flush()
 
+    def annotate(self, kind: str, step: int, **payload) -> None:
+        """Append an event record (liveness signals: heartbeat stalls,
+        straggler steps, preemption) to the JSONL stream."""
+        self._append({"event": kind, "step": int(step), **payload})
+
+    def _record_probes(self, ctx, step: int, health) -> None:
+        """Record the step's optimizer-health pytree (already host-side)
+        as probe records at the ObservabilitySpec cadence.  The device
+        computes the probes every step; *recording* is what's cadenced —
+        that split is what keeps the jit cache at one entry."""
+        ospec = getattr(ctx.spec, "observe", None)
+        if ospec is None or not ospec.enabled:
+            return
+        if step % ospec.optimizer_every == 0:
+            self._append(jsonify(
+                {"probe": "opt_health", "step": step,
+                 "group_ratio": health.get("group_ratio", {}),
+                 "eff_lr": health.get("eff_lr", {})}))
+        factored = health.get("factored")
+        if factored and step % ospec.resolved_factored_every() == 0:
+            self._append(jsonify(
+                {"probe": "factored", "step": step, **factored}))
+
     def on_step_end(self, ctx, ev: StepEvent) -> None:
+        health = (ev.metrics.get("opt_health")
+                  if isinstance(ev.metrics, dict) else None)
+        if health is not None:
+            self._record_probes(ctx, ev.step, health)
         if ev.step % self.every:
             return
         ntok = ev.metrics.get("ntokens", 0.0)
@@ -209,16 +248,12 @@ class MetricsHook(Hook):
                "tokens_per_s": (ntok / ev.dt) if ev.dt > 0 else 0.0}
         if self._slot_tokens:
             rec["padding_efficiency"] = ntok / self._slot_tokens
-        with self._lock:
-            self.records.append(rec)
-            if self._fh is not None:
-                self._fh.write(json.dumps(rec) + "\n")
-                self._fh.flush()
+        self._append(rec)
 
     def on_recover(self, ctx, restored_step: int) -> None:
         with self._lock:
             self.records = [r for r in self.records
-                            if r["step"] < restored_step]
+                            if r.get("step", restored_step) < restored_step]
             self._rewrite()
 
     def on_exit(self, ctx) -> None:

@@ -217,6 +217,13 @@ def build_step_program(spec: RunSpec, arch=None, opt: Optional[Opt] = None,
             params2, opt2 = opt.step(params, grads, opt_state, hp)
             return params2, opt2, loss, metrics
 
+    if spec.observe.enabled:
+        # Optimizer-health probes fold into the SAME jitted program: the
+        # probe reductions are in-graph (constant metrics structure, so
+        # no recompiles) and their scalars ride the runner's one bundled
+        # per-step device_get alongside loss/metrics (repro-lint R2).
+        from repro.telemetry.probes import instrument_step
+        one_step = instrument_step(one_step, opt=opt, ospec=spec.observe)
     jitted = (jax.jit(one_step, donate_argnums=(0, 1)) if donate
               else jax.jit(one_step))
     return StepProgram(spec=spec, arch=arch, opt=opt, fused=fused,

@@ -29,6 +29,7 @@ import json
 from typing import Any, Mapping, Optional
 
 from repro.data.pipeline import DataConfig
+from repro.telemetry.probes import ObservabilitySpec
 
 # Paper hyper-parameters (Table 6/7): AdaLomo lr ≈ 5e-4 (IT) / 1e-3
 # (pretrain); AdamW 1e-5..2e-5; LOMO/SGD 1e-2.
@@ -205,6 +206,8 @@ class RunSpec:
     eval: EvalSpec = dataclasses.field(default_factory=EvalSpec)
     fault: FaultSpec = dataclasses.field(default_factory=FaultSpec)
     profile: ProfileSpec = dataclasses.field(default_factory=ProfileSpec)
+    observe: ObservabilitySpec = dataclasses.field(
+        default_factory=ObservabilitySpec)
     log_every: int = 10
     seed: int = 0
     # JSONL metrics export (MetricsHook): step, loss, tokens/s, padding
@@ -220,7 +223,17 @@ class RunSpec:
 
     # ---------------- serialization ----------------
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        # JSON-canonical: tuples (e.g. ObservabilitySpec.hist_range)
+        # become lists so to_dict() == json round-trip of itself;
+        # from_dict normalizes back to tuples.
+        def canon(x):
+            if isinstance(x, dict):
+                return {k: canon(v) for k, v in x.items()}
+            if isinstance(x, (list, tuple)):
+                return [canon(v) for v in x]
+            return x
+
+        return canon(dataclasses.asdict(self))
 
     def to_json(self, **kw) -> str:
         return json.dumps(self.to_dict(), **kw)
@@ -242,6 +255,7 @@ class RunSpec:
         sub("eval", EvalSpec)
         sub("fault", FaultSpec)
         sub("profile", ProfileSpec)
+        sub("observe", ObservabilitySpec)
         return cls(**d)
 
     @classmethod
@@ -291,6 +305,16 @@ def add_cli_args(ap) -> None:
     ap.add_argument("--metrics-path", default=None,
                     help="JSONL metrics file (MetricsHook): step, loss, "
                          "tokens/s, padding efficiency")
+    ap.add_argument("--observe-every", type=int, default=0,
+                    help="record optimizer-health probes (group update/"
+                         "param norm ratios, effective-lr histogram) every "
+                         "N steps into the metrics stream; 0 = off")
+    ap.add_argument("--observe-factored-every", type=int, default=0,
+                    help="factored-moment reconstruction-error probe "
+                         "cadence (0 = follow --observe-every)")
+    ap.add_argument("--observe-tensors", type=int, default=2,
+                    help="how many of the largest moment tensors the "
+                         "reconstruction probe samples")
     ap.add_argument("--mesh-shape", default=None,
                     help="elastic device-mesh shape, e.g. 4x2 = 4-way data "
                          "x 2-way model (runs the step sharded; checkpoint "
@@ -359,6 +383,10 @@ def from_cli_args(args) -> RunSpec:
                         preempt=not args.no_preempt),
         profile=ProfileSpec(dir=args.profile_dir, start=args.profile_start,
                             steps=args.profile_steps),
+        observe=ObservabilitySpec(
+            optimizer_every=args.observe_every,
+            factored_every=args.observe_factored_every,
+            sample_tensors=args.observe_tensors),
         log_every=args.log_every,
         seed=args.seed,
         metrics_path=args.metrics_path)

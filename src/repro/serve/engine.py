@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Optional
 
 import jax
@@ -36,6 +37,7 @@ import numpy as np
 from repro.serve.paging import (OutOfPages, PageAllocator,
                                 build_block_tables)
 from repro.serve.scheduler import RUNNING, Request, Scheduler
+from repro.telemetry.serve import ServeTelemetry
 
 
 def _sample_tokens(logits, key, temperature):
@@ -133,6 +135,8 @@ class PagedServeConfig:
     bucket_min: int = 16          # smallest prefill bucket
     use_kernel: Optional[bool] = None   # None = Pallas kernel on TPU only
     interpret: bool = False             # Pallas interpret mode (tests)
+    telemetry_path: Optional[str] = None  # serve-gauge JSONL stream
+    telemetry_every: int = 1            # sample cadence in chunks
 
 
 def _bucket_len(n: int, lo: int) -> int:
@@ -154,6 +158,11 @@ class PagedEngine:
         self.scheduler = Scheduler(B, self.allocator, P)
         self._rid = itertools.count()
         self.requests: dict[int, Request] = {}
+        # gauges read only host bookkeeping (allocator/scheduler state),
+        # so sampling never adds a device sync to the serving hot path
+        self.telemetry = (ServeTelemetry(scfg.telemetry_path,
+                                         every=scfg.telemetry_every)
+                          if scfg.telemetry_path else None)
 
         # --- device state -------------------------------------------------
         self._pages = arch.init_page_pool(scfg.num_pages, ps)
@@ -198,6 +207,8 @@ class PagedEngine:
     def run(self) -> None:
         while self.scheduler.has_work():
             self.step()
+        if self.telemetry is not None:
+            self.telemetry.sample(self, force=True)
 
     def output(self, rid: int) -> list[int]:
         return self.requests[rid].out
@@ -236,7 +247,13 @@ class PagedEngine:
         if not self.scheduler.running():
             return
         self._ensure_ahead_all()
+        t0 = time.perf_counter()
         toks = self._run_chunk()
+        if self.telemetry is not None:
+            self.telemetry.note_decode(time.perf_counter() - t0)
+            # sample before _collect retires finished sequences, so the
+            # gauge sees the pool pressure the chunk actually ran under
+            self.telemetry.sample(self)
         self._collect(toks)
 
     def _admit_all(self) -> None:
@@ -250,6 +267,7 @@ class PagedEngine:
         """(Re-)prefill req's tokens, scatter K/V into its pages, sample
         the first new token, and activate its slot."""
         scfg = self.scfg
+        t0 = time.perf_counter()
         tokens = req.tokens
         n = len(tokens)
         bucket = _bucket_len(n, scfg.bucket_min)
@@ -265,16 +283,18 @@ class PagedEngine:
                                     jnp.asarray(bt_row),
                                     jnp.asarray(n, jnp.int32))
         key = jax.random.fold_in(self._key, 2 ** 20 + self._prefill_count)
-        t0 = int(jax.device_get(self._sample_jit(logits, key))[0])
+        t0_tok = int(jax.device_get(self._sample_jit(logits, key))[0])
+        if self.telemetry is not None:
+            self.telemetry.note_prefill(time.perf_counter() - t0)
         if req.max_new_tokens > 0:
-            req.out.append(t0)
+            req.out.append(t0_tok)
         req.n_cached = n
         s = req.slot
-        if (scfg.eos_id >= 0 and t0 == scfg.eos_id) or req.budget <= 0:
+        if (scfg.eos_id >= 0 and t0_tok == scfg.eos_id) or req.budget <= 0:
             self.scheduler.finish(req)
             self._done[s] = True
             return
-        self._tok[s] = t0
+        self._tok[s] = t0_tok
         self._n[s] = n
         self._budget[s] = req.budget
         self._done[s] = False

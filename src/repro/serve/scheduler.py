@@ -66,6 +66,9 @@ class Scheduler:
         self.queue: deque[Request] = deque()
         self._admit_counter = 0
         self._admit_idx: dict[int, int] = {}   # rid -> admission order
+        # lifetime counters sampled by the serve telemetry gauges
+        self.counters = {"admitted": 0, "preempted": 0, "finished": 0,
+                         "evicted_pages": 0}
 
     # ---- queries ----------------------------------------------------------
     def has_work(self) -> bool:
@@ -118,6 +121,7 @@ class Scheduler:
         self.slots[slot] = req
         self._admit_idx[req.rid] = self._admit_counter
         self._admit_counter += 1
+        self.counters["admitted"] += 1
         return req
 
     def ensure_ahead(self, req: Request, lookahead: int) -> None:
@@ -136,6 +140,8 @@ class Scheduler:
         if not running:
             return None
         victim = max(running, key=lambda r: self._admit_idx[r.rid])
+        self.counters["preempted"] += 1
+        self.counters["evicted_pages"] += len(victim.pages)
         self.alloc.free(victim.pages)
         self.slots[victim.slot] = None
         victim.pages = []
@@ -153,3 +159,4 @@ class Scheduler:
         req.pages = []
         req.slot = None
         req.status = FINISHED
+        self.counters["finished"] += 1

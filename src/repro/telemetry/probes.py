@@ -1,0 +1,274 @@
+"""Optimizer-health probes — on-device reductions folded into the step
+program (DESIGN.md §"Telemetry v1").
+
+AdaLomo's correctness hinges on internals the loss curve does not show:
+the grouped update normalization (Alg. 1 line 11) and the non-negative
+factorization of the second moment (Eq. 5-7) — the exact place low-memory
+optimizers silently degrade.  :func:`instrument_step` wraps the step
+program's pure callable so that every step additionally returns, inside
+the metrics pytree under ``"opt_health"``:
+
+* **per-GroupSpec update/param norm ratios** — ``‖Δθ‖/‖θ‖`` accumulated
+  over each Opt-v2 param group (the trust-ratio health signal: a group
+  whose ratio explodes or collapses is diverging or frozen);
+* **an effective-lr histogram** — the per-tensor-unit relative update
+  ``RMS(Δθ)/RMS(θ)`` binned into fixed log10 buckets (stacked ``[L, ...]``
+  leaves contribute one value per layer slice, matching the per-matrix
+  grouped normalization), plus its mean/max;
+* **factored-moment reconstruction error** on the K largest factored
+  tensors.  The exact ``‖v − r cᵀ/Σr‖`` needs the unfactored v, which the
+  low-memory state deliberately never materializes; what *is* exactly
+  computable from the (pre, post) state transition is the **rank-1
+  transition residual**: with the implied per-step statistics
+  ``R = (rₜ − β rₜ₋₁)/(1−β)`` (and C likewise, both exact marginals of
+  this step's g²), compare v̂(rₜ,cₜ) against ``β·v̂(rₜ₋₁,cₜ₋₁) +
+  (1−β)·v̂(R,C)``.  The residual is zero exactly when the factored EMA
+  recursion commutes with the rank-1 reconstruction — i.e. when the
+  factorization is faithful this step — and grows with the non-rank-1
+  mass the factored state is discarding.  Tensors that carry an
+  *unfactored* ``v`` (1-D params, or groups forced ``factored=False``)
+  get the literal ``‖v − v_r v_cᵀ/Σv_r‖/‖v‖`` instead, since v exists.
+
+Contract (asserted in ``tests/telemetry/test_probes.py``): the wrapper
+adds **zero steady-state recompiles** (same jaxpr every step — probes are
+computed in-graph each step; the *recording* cadence is host-side) and
+**zero new host syncs** — the probe scalars ride the runner's one bundled
+per-step ``device_get`` inside the metrics pytree (repro-lint R2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adalomo import FactoredState
+from repro.core.api import STACKS_KEY, path_str
+
+_TINY = 1e-30
+# Relative updates are measured against max(RMS(θ), _RMS_FLOOR) — the
+# Adafactor/AdaLomo eps2 convention — so zero-initialized groups (e.g.
+# zero-centered norm scales) report against the floor instead of ∞.
+_RMS_FLOOR = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class ObservabilitySpec:
+    """Per-probe cadence + shape knobs for the telemetry layer, on
+    :class:`~repro.run.spec.RunSpec` as the ``observe`` field.
+
+    ``optimizer_every=0`` disables the optimizer-health probes entirely
+    (the step program is not wrapped).  When enabled, probe tensors are
+    computed in-graph every step (cheap reductions, constant structure —
+    zero recompiles); the cadences below govern how often the stream
+    *records* them:
+
+    ``optimizer_every``  group-ratio + effective-lr records;
+    ``factored_every``   reconstruction-residual records (0 = follow
+                         ``optimizer_every``);
+    ``sample_tensors``   how many of the largest factored (and unfactored
+                         >= 2-D) moment tensors get the residual probe;
+    ``hist_bins`` / ``hist_range``  fixed log10 bin layout of the
+                         effective-lr histogram (fixed shape — the jit
+                         signature never depends on the data).
+    """
+
+    optimizer_every: int = 0
+    factored_every: int = 0
+    sample_tensors: int = 2
+    hist_bins: int = 16
+    hist_range: tuple = (-8.0, 0.0)
+
+    def __post_init__(self):
+        if self.optimizer_every < 0 or self.factored_every < 0:
+            raise ValueError("probe cadences must be >= 0")
+        if self.sample_tensors < 0 or self.hist_bins < 1:
+            raise ValueError(
+                f"sample_tensors={self.sample_tensors} hist_bins="
+                f"{self.hist_bins}")
+        lo, hi = self.hist_range
+        if not lo < hi:
+            raise ValueError(f"hist_range {self.hist_range} must be (lo, hi)")
+        # normalize (JSON round-trips lists) so specs compare equal
+        object.__setattr__(self, "hist_range",
+                           (float(lo), float(hi)))
+
+    @property
+    def enabled(self) -> bool:
+        return self.optimizer_every > 0
+
+    def resolved_factored_every(self) -> int:
+        return self.factored_every or self.optimizer_every
+
+
+# --------------------------------------------------------------------------
+# In-graph reductions
+# --------------------------------------------------------------------------
+
+def _is_stacked(path: str, leaf) -> bool:
+    parts = path.split("/") if path else []
+    return bool(parts) and parts[0] == STACKS_KEY and \
+        getattr(leaf, "ndim", 0) >= 1
+
+
+def _unit_rms(x, stacked: bool):
+    """RMS over the per-tensor unit: the whole leaf, or each layer slice
+    of a stacked ``[L, ...]`` leaf — one value per unit, flattened."""
+    x = x.astype(jnp.float32)
+    axes = tuple(range(1, x.ndim)) if stacked else None
+    if axes == ():                       # stacked scalar-per-layer
+        return jnp.abs(x).reshape(-1)
+    r = jnp.sqrt(jnp.mean(jnp.square(x), axis=axes))
+    return r.reshape(-1)
+
+
+def group_ratios(p_old, p_new, opt) -> dict:
+    """``‖Δθ‖ / max(‖θ‖, eps2·√n)`` per Opt-v2 param group (f32 scalars,
+    one per group name, group 'default' first).  The denominator floor is
+    the group-norm equivalent of ``RMS(θ) >= _RMS_FLOOR``."""
+    labels = jax.tree.leaves(opt.labels(p_old))
+    old = jax.tree.leaves(p_old)
+    new = jax.tree.leaves(p_new)
+    names = ["default"] + [g.name for g in opt.groups]
+    upd = [jnp.zeros((), jnp.float32) for _ in names]
+    par = [jnp.zeros((), jnp.float32) for _ in names]
+    cnt = [0 for _ in names]
+    for o, n, lab in zip(old, new, labels):
+        d = (n.astype(jnp.float32) - o.astype(jnp.float32))
+        upd[lab] = upd[lab] + jnp.sum(jnp.square(d))
+        par[lab] = par[lab] + jnp.sum(jnp.square(o.astype(jnp.float32)))
+        cnt[lab] += int(o.size)
+    return {name: jnp.sqrt(u) / jnp.maximum(
+                jnp.sqrt(p), _RMS_FLOOR * max(c, 1) ** 0.5)
+            for name, u, p, c in zip(names, upd, par, cnt)}
+
+
+def effective_lr_hist(p_old, p_new, ospec: ObservabilitySpec) -> dict:
+    """Fixed-shape histogram of per-unit relative updates
+    ``log10(RMS(Δθ)/RMS(θ))``, plus mean/max of the raw ratio."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(p_old)
+    new_leaves = jax.tree.leaves(p_new)
+    rels = []
+    for (kp, o), n in zip(flat, new_leaves):
+        stacked = _is_stacked(path_str(kp), o)
+        d_rms = _unit_rms(n.astype(jnp.float32) - o.astype(jnp.float32),
+                          stacked)
+        p_rms = _unit_rms(o, stacked)
+        rels.append(d_rms / jnp.maximum(p_rms, _RMS_FLOOR))
+    rel = jnp.concatenate(rels)
+    lo, hi = ospec.hist_range
+    edges = jnp.linspace(lo, hi, ospec.hist_bins + 1)
+    counts, _ = jnp.histogram(jnp.log10(jnp.maximum(rel, _TINY)),
+                              bins=edges)
+    return {"counts": counts, "lo": lo, "hi": hi,
+            "n_units": rel.shape[0],
+            "rel_update_mean": jnp.mean(rel),
+            "rel_update_max": jnp.max(rel)}
+
+
+def _recon(r, c):
+    """v̂ = outer(r, c) / Σr — rank-1 NMF reconstruction, leading dims
+    batched (stacked moments)."""
+    denom = jnp.maximum(jnp.sum(r, axis=-1, keepdims=True), _TINY)
+    return (r[..., :, None] * c[..., None, :]) / denom[..., None]
+
+
+def _fro(x):
+    return jnp.sqrt(jnp.sum(jnp.square(x), axis=(-2, -1)))
+
+
+def transition_residual(r_old, c_old, r_new, c_new, beta):
+    """Rank-1 transition residual of the factored EMA (see module doc):
+    ‖v̂ₜ − (β v̂ₜ₋₁ + (1−β) v̂(R,C))‖_F / ‖v̂ₜ‖_F, mean over leading dims."""
+    b = jnp.asarray(beta, jnp.float32)
+    one_m_b = jnp.maximum(1.0 - b, _TINY)
+    r_imp = jnp.maximum(r_new - b * r_old, 0.0) / one_m_b
+    c_imp = jnp.maximum(c_new - b * c_old, 0.0) / one_m_b
+    v_new = _recon(r_new, c_new)
+    pred = b * _recon(r_old, c_old) + (1.0 - b) * _recon(r_imp, c_imp)
+    res = _fro(v_new - pred) / jnp.maximum(_fro(v_new), _TINY)
+    return jnp.mean(res)
+
+
+def factorization_error(v):
+    """Literal ‖v − v_r v_cᵀ/Σv_r‖_F / ‖v‖_F for a materialized v (>= 2-D)
+    — the error a rank-1 factorization of this tensor WOULD incur now."""
+    r = jnp.sum(v, axis=-1)
+    c = jnp.sum(v, axis=-2)
+    res = _fro(v - _recon(r, c)) / jnp.maximum(_fro(v), _TINY)
+    return jnp.mean(res)
+
+
+def _moment_leaves(moments):
+    """[(path, FactoredState)] — per-tensor moment states with paths."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        moments, is_leaf=lambda x: isinstance(x, FactoredState))
+    return [(path_str(kp), st) for kp, st in flat
+            if isinstance(st, FactoredState)]
+
+
+def _sample(pairs, k):
+    """Deterministic sample: the k largest by reconstructed-tensor size,
+    ties broken by path (static — baked into the jaxpr once)."""
+    return sorted(pairs, key=lambda ps: (-ps[1], ps[0]))[:k]
+
+
+def _recon_size(st: FactoredState) -> int:
+    """Element count of the tensor v̂(r, c) reconstructs (incl. stacks)."""
+    lead = 1
+    for d in st.r.shape[:-1]:
+        lead *= int(d)
+    return lead * int(st.r.shape[-1]) * int(st.c.shape[-1])
+
+
+def factored_health(s_old, s_new, beta, ospec: ObservabilitySpec) -> dict:
+    """Reconstruction-error probes over sampled moment tensors.  Returns
+    ``{"recon/<path>": residual}`` (+ ``"fact_err/<path>"`` for tensors
+    carrying an explicit v).  Empty when the rule's state is not the
+    AdaLomo factored layout or ``beta`` is unavailable."""
+    out: dict = {}
+    if beta is None:
+        return out
+    old = dict(_moment_leaves(s_old))
+    new = dict(_moment_leaves(s_new))
+    fact = [(p, _recon_size(st)) for p, st in new.items()
+            if st.r is not None and st.c is not None and p in old]
+    for p, _sz in _sample(fact, ospec.sample_tensors):
+        so, sn = old[p], new[p]
+        out[f"recon/{p}"] = transition_residual(so.r, so.c, sn.r, sn.c,
+                                                beta)
+    dense = [(p, int(st.v.size)) for p, st in new.items()
+             if st.v is not None and st.v.ndim >= 2]
+    for p, _sz in _sample(dense, ospec.sample_tensors):
+        out[f"fact_err/{p}"] = factorization_error(new[p].v)
+    return out
+
+
+def optimizer_health(p_old, p_new, s_old, s_new, hp, *, opt,
+                     ospec: ObservabilitySpec) -> dict:
+    """The full per-step health pytree (all f32 device scalars + one
+    fixed-shape histogram).  Structure depends only on (params, opt,
+    ospec) — identical every step, so the jitted step never recompiles."""
+    resolved = opt.resolve(hp)[0]
+    beta = resolved.get("beta")
+    return {
+        "group_ratio": group_ratios(p_old, p_new, opt),
+        "eff_lr": effective_lr_hist(p_old, p_new, ospec),
+        "factored": factored_health(s_old.moments, s_new.moments, beta,
+                                    ospec),
+    }
+
+
+def instrument_step(inner, *, opt, ospec: ObservabilitySpec):
+    """Wrap a step callable ``(params, opt_state, batch, hp) -> (params',
+    opt_state', loss, metrics)`` so metrics additionally carries
+    ``"opt_health"``.  Folded in *before* jit by ``build_step_program``:
+    one program, one compile, one bundled per-step transfer."""
+
+    def instrumented(params, opt_state, batch, hp):
+        p2, s2, loss, metrics = inner(params, opt_state, batch, hp)
+        health = optimizer_health(params, p2, opt_state, s2, hp,
+                                  opt=opt, ospec=ospec)
+        return p2, s2, loss, {**metrics, "opt_health": health}
+
+    return instrumented

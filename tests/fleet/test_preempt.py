@@ -161,7 +161,8 @@ def test_sigterm_then_elastic_resume_subprocess(tmp_path):
 
     recs = [json.loads(l) for l in (tmp_path / "m.jsonl").open()
             if l.strip()]
-    steps = sorted((r for r in recs if "event" not in r),
+    steps = sorted((r for r in recs
+                    if "event" not in r and "schema" not in r),
                    key=lambda r: r["step"])
     assert [r["step"] for r in steps] == list(range(40))
     merged = np.asarray([r["loss"] for r in steps])

@@ -137,7 +137,8 @@ def test_crash_mid_sweep_resumes_only_unfinished(tmp_path):
     recs = [json.loads(l)
             for l in (sweep_dir / names[1] / "metrics.jsonl").open()
             if l.strip()]
-    assert [r["step"] for r in recs if "event" not in r] == list(range(6))
+    data = [r for r in recs if "schema" not in r and "event" not in r]
+    assert [r["step"] for r in data] == list(range(6))
     # and its history is complete
     hist = json.loads((sweep_dir / names[1] / "history.json").read_text())
     assert len(hist["loss"]) == 6 - 2   # resumed tail

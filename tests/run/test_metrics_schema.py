@@ -1,0 +1,127 @@
+"""MetricsHook × schema v1: the stream opens with a header, probe
+records obey the ObservabilitySpec cadence and the rewind contract, and
+— the back-compat guarantee — old unversioned JSONL files still parse
+through the reader and every find_metrics_hook consumer path."""
+import json
+import types
+
+from repro.run import MetricsHook, ObservabilitySpec, StepEvent
+from repro.telemetry import iter_data_records, read_stream
+
+
+def _ctx(metrics, start_step=0, observe=None):
+    return types.SimpleNamespace(
+        spec=types.SimpleNamespace(data=None, observe=observe),
+        start_step=start_step, log=lambda s: None, hooks=(metrics,))
+
+
+def _ev(step, health=None, loss=1.0):
+    metrics = {} if health is None else {"opt_health": health}
+    return StepEvent(step=step, loss=loss, metrics=metrics,
+                     hparams={"lr": 1e-3}, dt=0.1)
+
+
+def _health(x=0.5):
+    return {"group_ratio": {"default": x}, "eff_lr": {"n_units": 1},
+            "factored": {"recon/w": x / 2}}
+
+
+def test_stream_opens_with_v1_header(tmp_path):
+    p = tmp_path / "m.jsonl"
+    m = MetricsHook(p)
+    ctx = _ctx(m)
+    m.on_run_start(ctx)
+    m.on_step_end(ctx, _ev(0))
+    m.on_exit(ctx)
+    lines = [json.loads(l) for l in p.open()]
+    assert lines[0] == {"schema": 1, "stream": "train"}
+    assert m.records == lines[1:]            # header never in records
+    s = read_stream(p)
+    assert s.schema == 1 and len(s.steps()) == 1
+
+
+def test_legacy_unversioned_stream_still_parses(tmp_path):
+    """Pre-v1 files (no header) must read cleanly — schema 0."""
+    p = tmp_path / "old.jsonl"
+    p.write_text('{"step": 0, "loss": 2.0, "tokens_per_s": 10.0}\n'
+                 '{"event": "straggler", "step": 1, "dt_s": 9.0}\n'
+                 '{"step": 1, "loss": 1.5, "tokens_per_s": 11.0}\n')
+    s = read_stream(p)
+    assert s.schema == 0 and s.header is None
+    assert [r["step"] for r in s.steps()] == [0, 1]
+    assert len(s.events("straggler")) == 1
+    # the consumer surface sweep._member_stats uses — identical records
+    recs = list(iter_data_records(p.read_text().splitlines()))
+    assert len(recs) == 3
+
+
+def test_resume_from_legacy_file_upgrades_to_v1(tmp_path):
+    """A resumed run over a pre-v1 metrics file keeps the old records and
+    rewrites the stream WITH a header — write-side upgrade, read-side
+    back-compat."""
+    p = tmp_path / "m.jsonl"
+    p.write_text('{"step": 0, "loss": 2.0}\n{"step": 1, "loss": 1.9}\n'
+                 '{"step": 2, "loss": 1.8}\n')
+    m = MetricsHook(p)
+    ctx = _ctx(m, start_step=2)
+    m.on_run_start(ctx)                      # keeps steps < 2
+    m.on_step_end(ctx, _ev(2, loss=1.7))
+    m.on_exit(ctx)
+    lines = [json.loads(l) for l in p.open()]
+    assert lines[0]["schema"] == 1
+    data = lines[1:]
+    assert [r["step"] for r in data] == [0, 1, 2]
+    assert data[2]["loss"] == 1.7            # re-executed tail replaced
+
+
+def test_resume_from_v1_file_keeps_single_header(tmp_path):
+    p = tmp_path / "m.jsonl"
+    m = MetricsHook(p)
+    ctx = _ctx(m)
+    m.on_run_start(ctx)
+    m.on_step_end(ctx, _ev(0))
+    m.on_step_end(ctx, _ev(1))
+    m.on_exit(ctx)
+
+    m2 = MetricsHook(p)
+    ctx2 = _ctx(m2, start_step=1)
+    m2.on_run_start(ctx2)
+    m2.on_step_end(ctx2, _ev(1))
+    m2.on_exit(ctx2)
+    lines = [json.loads(l) for l in p.open()]
+    assert sum(1 for r in lines if "schema" in r) == 1
+    assert [r["step"] for r in lines[1:]] == [0, 1]
+
+
+def test_probe_records_cadence_and_rewind(tmp_path):
+    p = tmp_path / "m.jsonl"
+    m = MetricsHook(p)
+    ctx = _ctx(m, observe=ObservabilitySpec(optimizer_every=2,
+                                            factored_every=4))
+    m.on_run_start(ctx)
+    for step in range(6):
+        m.on_step_end(ctx, _ev(step, health=_health(0.1 * (step + 1))))
+    s = read_stream(p)
+    assert [r["step"] for r in s.probes("opt_health")] == [0, 2, 4]
+    assert [r["step"] for r in s.probes("factored")] == [0, 4]
+
+    # fault rewind to step 3: probe records at/after 3 are dropped too,
+    # then re-recorded identically by the re-executed steps
+    m.on_recover(ctx, 3)
+    for step in range(3, 6):
+        m.on_step_end(ctx, _ev(step, health=_health(0.1 * (step + 1))))
+    m.on_exit(ctx)
+    s2 = read_stream(p)
+    assert [r["step"] for r in s2.probes("opt_health")] == [0, 2, 4]
+    assert [r["step"] for r in s2.steps()] == list(range(6))
+    assert s2.probes("opt_health")[-1]["group_ratio"]["default"] == 0.5
+
+
+def test_probes_not_recorded_when_observe_disabled(tmp_path):
+    p = tmp_path / "m.jsonl"
+    m = MetricsHook(p)
+    ctx = _ctx(m, observe=None)              # e.g. a hand-built ctx
+    m.on_run_start(ctx)
+    m.on_step_end(ctx, _ev(0, health=_health()))
+    m.on_exit(ctx)
+    assert read_stream(p).probes() == []

@@ -175,7 +175,9 @@ def test_packed_run_recovers_bitwise_after_fault(tmp_path):
     assert res.history["step"] == clean.history["step"] == list(range(7))
     np.testing.assert_allclose(res.history["loss"], clean.history["loss"])
 
-    recs = [json.loads(line) for line in open(mp)]
+    lines = [json.loads(line) for line in open(mp)]
+    assert lines[0] == {"schema": 1, "stream": "train"}   # versioned stream
+    recs = [r for r in lines if "schema" not in r]
     assert [r["step"] for r in recs] == list(range(7))
     assert all(0 < r["padding_efficiency"] <= 1.0 for r in recs)
     assert all(r["tokens_per_s"] > 0 for r in recs)
@@ -186,6 +188,7 @@ def test_metrics_hook_every_and_default_pipeline(tmp_path):
     res = run(_spec(total=4, metrics_path=mp), log_fn=lambda s: None)
     assert res.find_hook(MetricsHook) is not None
     recs = [json.loads(line) for line in open(mp)]
+    recs = [r for r in recs if "schema" not in r]
     assert [r["step"] for r in recs] == [0, 1, 2, 3]
     assert {"loss", "lr", "dt_s", "ntokens", "tokens_per_s",
             "padding_efficiency"} <= set(recs[0])

@@ -1,0 +1,42 @@
+"""CI schema-validation of the committed BENCH_*.json baselines — runs
+in the fast tier AND as a standalone stage in scripts/ci.sh (`python -m
+repro.telemetry.schema benchmarks`)."""
+from pathlib import Path
+
+from repro.telemetry import validate_bench, validate_bench_dir
+from repro.telemetry.schema import main
+
+BENCH_DIR = Path(__file__).resolve().parents[2] / "benchmarks"
+
+
+def test_all_committed_benchmarks_validate():
+    names = validate_bench_dir(BENCH_DIR)
+    assert names, "no committed BENCH_*.json found"
+    # the Telemetry-v1 deliverable: the kernel roofline baseline exists
+    assert "BENCH_roofline.json" in names
+    assert "BENCH_serve.json" in names
+
+
+def test_roofline_baseline_contents():
+    payload = validate_bench(BENCH_DIR / "BENCH_roofline.json")
+    assert payload["peak"]["gflops"] > 0
+    kernels = {r["kernel"] for r in payload["kernels"]}
+    assert kernels == {"adalomo_update", "paged_decode_attention"}
+    for row in payload["kernels"]:
+        assert row["flops"] > 0 and row["bytes"] > 0 and row["wall_us"] > 0
+        assert 0 < row["frac_of_peak"] <= 1.0
+    # analytic config-zoo rows ride along, clearly marked
+    assert all(r.get("analytic") for r in payload["analytic"])
+
+
+def test_serve_baseline_has_pool_utilization():
+    payload = validate_bench(BENCH_DIR / "BENCH_serve.json")
+    pu = payload["pool_utilization"]
+    assert 0 <= pu["mean"] <= pu["max"] <= 1.0
+    assert pu["samples"] > 0
+
+
+def test_schema_cli_entry(capsys):
+    assert main([str(BENCH_DIR)]) == 0
+    out = capsys.readouterr().out
+    assert "BENCH_roofline.json" in out

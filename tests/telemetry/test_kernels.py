@@ -1,0 +1,70 @@
+"""Kernel roofline counter registry: analytic FLOPs/bytes sanity, the
+page-granular KV traffic model, and the config-zoo analytic cases."""
+import math
+
+import pytest
+
+from repro.telemetry import (adalomo_update_counters, counters_for,
+                             paged_decode_attention_counters, zoo_cases)
+
+
+def test_adalomo_update_counts_scale_with_elements():
+    a = adalomo_update_counters(256, 512)
+    assert a.kernel == "adalomo_update"
+    assert a.flops == 13.0 * 256 * 512 + 6.0 * (256 + 512)
+    assert a.bytes == 4.0 * 256 * 512 * 4 + 4.0 * (256 + 512) * 4
+    # stacked [L, m, n] tensors launch L kernels
+    s = adalomo_update_counters(256, 512, stacks=3)
+    assert s.flops == 3 * a.flops and s.bytes == 3 * a.bytes
+    assert a.intensity == pytest.approx(a.flops / a.bytes)
+
+
+def test_paged_decode_attention_page_granular_bytes():
+    base = dict(batch=2, q_heads=8, kv_heads=2, head_dim=64)
+    # 100 cached tokens at page_size=16 touch ceil(100/16)=7 pages
+    kc = paged_decode_attention_counters(seq_len=100, page_size=16, **base)
+    touched = math.ceil(100 / 16)
+    kv = 2 * touched * 16 * 2 * 64 * 4 * 2
+    qo = 2 * 2 * 8 * 64 * 4
+    assert kc.bytes == kv + qo
+    # one more token crosses a page boundary -> one more page of traffic
+    kc2 = paged_decode_attention_counters(seq_len=113, page_size=16, **base)
+    assert kc2.bytes > kc.bytes
+    # a fixed block-table grid (today's kernel) reads all pages_per_seq
+    kc3 = paged_decode_attention_counters(seq_len=100, page_size=16,
+                                          pages_per_seq=32, **base)
+    assert kc3.bytes > kc.bytes
+    # FLOPs don't depend on paging at all
+    assert kc3.flops == kc.flops == 2 * 8 * (4.0 * 100 * 64 + 5.0 * 100)
+
+
+def test_gqa_shares_kv_pages_across_query_heads():
+    lo = paged_decode_attention_counters(batch=1, q_heads=32, kv_heads=8,
+                                         head_dim=64, seq_len=256)
+    hi = paged_decode_attention_counters(batch=1, q_heads=32, kv_heads=32,
+                                         head_dim=64, seq_len=256)
+    assert lo.flops == hi.flops          # every q head attends fully
+    assert lo.bytes < hi.bytes           # but shares 4x fewer KV pages
+
+
+def test_counters_for_registry_dispatch():
+    kc = counters_for("adalomo_update", m=8, n=8)
+    assert kc.kernel == "adalomo_update"
+    with pytest.raises(KeyError, match="no roofline counters"):
+        counters_for("unknown_kernel", m=1)
+
+
+def test_record_is_a_valid_kernel_stream_record():
+    from repro.telemetry import validate_record
+    rec = counters_for("adalomo_update", m=8, n=8).record(wall_us=1.5)
+    assert validate_record(rec) == "kernel"
+    assert rec["wall_us"] == 1.5 and rec["shape"]["m"] == 8
+
+
+def test_zoo_cases_cover_decode_and_update():
+    cases = zoo_cases()
+    kernels = {k for k, _, _ in cases}
+    assert kernels == {"paged_decode_attention", "adalomo_update"}
+    for kernel, shape, cell in cases:
+        kc = counters_for(kernel, **shape)
+        assert kc.flops > 0 and kc.bytes > 0, cell

@@ -1,0 +1,159 @@
+"""Optimizer-health probes: the in-graph reduction math (unit-level) and
+the end-to-end contract — probes ride the one bundled per-step transfer,
+record at the ObservabilitySpec cadence, and add zero steady-state
+recompiles (jit cache stays at one entry)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import optimizers as opt_lib
+from repro.core.api import Opt, no_decay_1d
+from repro.telemetry.probes import (ObservabilitySpec, effective_lr_hist,
+                                    factorization_error, group_ratios,
+                                    transition_residual)
+
+
+def test_observability_spec_validation():
+    with pytest.raises(ValueError):
+        ObservabilitySpec(optimizer_every=-1)
+    with pytest.raises(ValueError):
+        ObservabilitySpec(hist_bins=0)
+    with pytest.raises(ValueError):
+        ObservabilitySpec(hist_range=(2.0, -2.0))
+    s = ObservabilitySpec(optimizer_every=4, hist_range=[-6, 0])
+    assert s.enabled and s.hist_range == (-6.0, 0.0)
+    assert s.resolved_factored_every() == 4
+    assert ObservabilitySpec(optimizer_every=4,
+                             factored_every=12).resolved_factored_every() == 12
+    assert not ObservabilitySpec().enabled
+
+
+def _tiny_opt():
+    rule = opt_lib.get_rule("adalomo")
+    return Opt(rule, groups=(no_decay_1d(),))
+
+
+def test_group_ratios_match_manual_norms():
+    opt = _tiny_opt()
+    p_old = {"w": jnp.full((4, 4), 2.0), "b": jnp.full((4,), 1.0)}
+    p_new = {"w": p_old["w"] + 0.1, "b": p_old["b"] - 0.2}
+    r = jax.jit(lambda a, b: group_ratios(a, b, opt))(p_old, p_new)
+    assert set(r) == {"default", "no_decay"}
+    # ||Δw||/||w|| = (0.1*4)/(2*4), ||Δb||/||b|| = (0.2*2)/(1*2)
+    np.testing.assert_allclose(float(r["default"]), 0.4 / 8.0, rtol=1e-6)
+    np.testing.assert_allclose(float(r["no_decay"]), 0.4 / 2.0, rtol=1e-6)
+
+
+def test_group_ratio_zero_init_group_uses_rms_floor():
+    opt = _tiny_opt()
+    p_old = {"w": jnp.ones((2, 2)), "b": jnp.zeros((4,))}   # zero-init 1-D
+    p_new = {"w": p_old["w"], "b": p_old["b"] + 1e-3}
+    r = group_ratios(p_old, p_new, opt)
+    # floored at eps2*sqrt(n): ratio = (1e-3*2)/(1e-3*2) = 1, not ~1e27
+    np.testing.assert_allclose(float(r["no_decay"]), 1.0, rtol=1e-5)
+
+
+def test_effective_lr_hist_counts_and_stacked_units():
+    ospec = ObservabilitySpec(optimizer_every=1, hist_bins=8,
+                              hist_range=(-8.0, 0.0))
+    p_old = {"stacks": {"w": jnp.ones((3, 4, 4))},    # 3 per-layer units
+             "emb": jnp.ones((4, 4))}                 # 1 unit
+    p_new = jax.tree.map(lambda x: x * (1.0 - 1e-3), p_old)
+    h = effective_lr_hist(p_old, p_new, ospec)
+    assert int(h["n_units"]) == 4
+    assert int(jnp.sum(h["counts"])) == 4
+    assert h["counts"].shape == (8,)
+    # every unit moved by exactly rel 1e-3
+    np.testing.assert_allclose(float(h["rel_update_mean"]), 1e-3, rtol=1e-4)
+    np.testing.assert_allclose(float(h["rel_update_max"]), 1e-3, rtol=1e-4)
+
+
+def test_transition_residual_zero_for_consistent_rank1_transition():
+    # shared column marginal + equal row-marginal mass: the factored EMA
+    # recursion commutes with the rank-1 reconstruction exactly
+    c = jnp.asarray([1.0, 2.0, 1.0])
+    r_old = jnp.asarray([3.0, 1.0])          # sum 4
+    R = jnp.asarray([2.0, 2.0])              # sum 4 == sum(r_old)
+    beta = 0.5
+    r_new = beta * r_old + (1 - beta) * R
+    res = transition_residual(r_old, c, r_new, c, beta)
+    assert float(res) < 1e-6
+
+
+def test_transition_residual_positive_for_inconsistent_transition():
+    c_old = jnp.asarray([1.0, 2.0, 1.0])
+    c_new = jnp.asarray([4.0, 1.0, 3.0])     # column structure rotated
+    r_old = jnp.asarray([3.0, 1.0])
+    r_new = jnp.asarray([1.0, 3.0])
+    assert float(transition_residual(r_old, c_old, r_new, c_new, 0.9)) > 0.01
+
+
+def test_factorization_error_zero_iff_rank1():
+    a = jnp.asarray([1.0, 2.0, 3.0])
+    b = jnp.asarray([0.5, 1.5])
+    v1 = a[:, None] * b[None, :]             # non-negative rank-1
+    assert float(factorization_error(v1)) < 1e-6
+    v2 = v1.at[0, 0].add(2.0)                # rank-2 perturbation
+    assert float(factorization_error(v2)) > 0.01
+
+
+def test_run_probes_cadence_and_zero_recompiles(tmp_path):
+    """End-to-end: probes are recorded at the spec cadence, values are
+    finite, step records stay probe-free, and the step program's jit
+    cache holds exactly ONE entry after the whole run — the zero-extra-
+    recompiles / zero-extra-host-syncs acceptance gate."""
+    from repro.data.pipeline import DataConfig
+    from repro.run import (ModelSpec, ObservabilitySpec, OptSpec, RunSpec,
+                           StepSpec, build_step_program, run)
+
+    mp = tmp_path / "m.jsonl"
+    spec = RunSpec(model=ModelSpec("h2o-danube-1.8b", smoke=True),
+                   data=DataConfig(vocab=0, seq_len=32, global_batch=8),
+                   opt=OptSpec(name="adalomo", lr=1e-3, schedule="constant"),
+                   steps=StepSpec(total=5),
+                   observe=ObservabilitySpec(optimizer_every=2,
+                                             factored_every=4),
+                   metrics_path=str(mp), log_every=0)
+    prog = build_step_program(spec)
+    run(spec, program=prog, log_fn=lambda s: None)
+    assert prog.cache_size() == 1
+
+    recs = [json.loads(l) for l in mp.open()]
+    assert recs[0]["schema"] == 1
+    steps = [r for r in recs if "schema" not in r and "probe" not in r]
+    assert [r["step"] for r in steps] == [0, 1, 2, 3, 4]
+    assert all("opt_health" not in r for r in steps)
+
+    oh = [r for r in recs if r.get("probe") == "opt_health"]
+    assert [r["step"] for r in oh] == [0, 2, 4]
+    for r in oh:
+        assert set(r["group_ratio"]) == {"default", "no_decay"}
+        assert all(np.isfinite(v) and 0 <= v < 1e3
+                   for v in r["group_ratio"].values())
+        e = r["eff_lr"]
+        assert sum(e["counts"]) == e["n_units"] > 0
+        assert np.isfinite(e["rel_update_mean"])
+
+    fr = [r for r in recs if r.get("probe") == "factored"]
+    assert [r["step"] for r in fr] == [0, 4]
+    payload = {k: v for k, v in fr[0].items() if k not in ("probe", "step")}
+    assert any(k.startswith("recon/") for k in payload)
+    assert all(np.isfinite(v) and v >= 0 for v in payload.values())
+
+
+def test_disabled_observe_leaves_program_unwrapped():
+    from repro.data.pipeline import DataConfig
+    from repro.run import (ModelSpec, OptSpec, RunSpec, StepSpec,
+                           build_step_program)
+    spec = RunSpec(model=ModelSpec("h2o-danube-1.8b", smoke=True),
+                   data=DataConfig(vocab=0, seq_len=32, global_batch=8),
+                   opt=OptSpec(name="adalomo"), steps=StepSpec(total=2))
+    assert not spec.observe.enabled
+    prog = build_step_program(spec)
+    # jaxpr-level check: no opt_health in the step's output metrics tree
+    out = jax.eval_shape(prog.fn, *prog.abstract_args())
+    metrics = out[3]
+    assert "opt_health" not in metrics

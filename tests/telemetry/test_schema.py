@@ -1,0 +1,139 @@
+"""Schema v1 stream contract: header/kind classification, validation
+errors, legacy (schema-0) back-compat, truncation tolerance, and the
+committed-benchmark validators."""
+import json
+
+import pytest
+
+from repro.telemetry import (SCHEMA_VERSION, SchemaError, TelemetryWriter,
+                             classify, header_record, iter_data_records,
+                             jsonify, parse_records, read_stream,
+                             validate_bench, validate_record)
+
+
+def test_classify_every_kind():
+    assert classify({"schema": 1, "stream": "train"}) == "header"
+    assert classify({"step": 0, "loss": 1.0}) == "step"
+    assert classify({"event": "straggler", "step": 3}) == "event"
+    assert classify({"probe": "opt_health", "step": 2}) == "probe"
+    assert classify({"gauge": "serve", "t_s": 0.5}) == "gauge"
+    assert classify({"kernel": "adalomo_update", "flops": 1.0,
+                     "bytes": 2.0}) == "kernel"
+
+
+def test_validate_rejects_missing_required_fields():
+    with pytest.raises(SchemaError, match="missing"):
+        validate_record({"probe": "opt_health"})          # no step
+    with pytest.raises(SchemaError, match="missing"):
+        validate_record({"gauge": "serve"})               # no t_s
+    with pytest.raises(SchemaError, match="missing"):
+        validate_record({"kernel": "x", "flops": 1.0})    # no bytes
+    with pytest.raises(SchemaError, match="without 'step'"):
+        validate_record({"loss": 1.0})
+    with pytest.raises(SchemaError, match="not an object"):
+        validate_record([1, 2, 3])
+
+
+def test_validate_rejects_future_schema():
+    with pytest.raises(SchemaError, match="newer than this reader"):
+        validate_record(dict(header_record("train"),
+                             schema=SCHEMA_VERSION + 1))
+
+
+def test_legacy_headerless_stream_is_schema_0(tmp_path):
+    p = tmp_path / "legacy.jsonl"
+    p.write_text('{"step": 0, "loss": 2.0}\n{"step": 1, "loss": 1.5}\n')
+    s = read_stream(p)
+    assert s.schema == 0 and s.header is None
+    assert [r["step"] for r in s.steps()] == [0, 1]
+
+
+def test_v1_stream_roundtrip_and_kind_accessors(tmp_path):
+    p = tmp_path / "v1.jsonl"
+    with TelemetryWriter(p, stream="train", run="t") as w:
+        w.write({"step": 0, "loss": 2.0})
+        w.probe("opt_health", 0, ratio=0.5)
+        w.event("straggler", 0, dt_s=9.0)
+        w.gauge("serve", 0.25, pool_util=0.5)
+        w.kernel("adalomo_update", flops=10.0, bytes=20.0)
+    s = read_stream(p)
+    assert s.schema == SCHEMA_VERSION
+    assert s.header["stream"] == "train" and s.header["run"] == "t"
+    assert len(s.steps()) == 1
+    assert s.probes("opt_health")[0]["ratio"] == 0.5
+    assert s.probes("nope") == []
+    assert s.events()[0]["event"] == "straggler"
+    assert s.gauges()[0]["pool_util"] == 0.5
+    assert s.kernels()[0]["bytes"] == 20.0
+
+
+def test_writer_resume_does_not_duplicate_header(tmp_path):
+    p = tmp_path / "s.jsonl"
+    with TelemetryWriter(p, stream="serve") as w:
+        w.gauge("serve", 0.0, pool_util=0.0)
+    with TelemetryWriter(p, stream="serve") as w:     # reopen = resume
+        w.gauge("serve", 1.0, pool_util=0.5)
+    s = read_stream(p)          # strict: duplicate header would raise
+    assert len(s.gauges()) == 2
+
+
+def test_duplicate_header_is_strict_error_lenient_skip():
+    lines = ['{"schema": 1, "stream": "a"}', '{"schema": 1, "stream": "b"}']
+    with pytest.raises(SchemaError, match="duplicate header"):
+        parse_records(lines)
+    s = parse_records(lines, strict=False)
+    assert s.schema == 1
+
+
+def test_truncated_tail_strict_vs_lenient(tmp_path):
+    p = tmp_path / "t.jsonl"
+    p.write_text('{"schema": 1, "stream": "train"}\n'
+                 '{"step": 0, "loss": 2.0}\n'
+                 '{"step": 1, "lo')            # crash mid-write
+    with pytest.raises(SchemaError, match="not valid JSON"):
+        read_stream(p)
+    s = read_stream(p, strict=False)
+    assert [r["step"] for r in s.steps()] == [0]
+
+
+def test_iter_data_records_skips_headers_and_garbage():
+    lines = ['{"schema": 1, "stream": "train"}', '', '{"step": 0}',
+             'garbage{', '{"event": "e", "step": 0}', '[1,2]']
+    recs = list(iter_data_records(lines))
+    assert recs == [{"step": 0}, {"event": "e", "step": 0}]
+
+
+def test_jsonify_handles_numpy_and_nesting():
+    np = pytest.importorskip("numpy")
+    out = jsonify({"a": np.float32(1.5), "b": [np.arange(3)],
+                   "c": {"d": np.int64(2)}})
+    assert out == {"a": 1.5, "b": [[0, 1, 2]], "c": {"d": 2}}
+    assert json.dumps(out)      # fully JSON-serializable
+
+
+def test_validate_bench(tmp_path):
+    good = tmp_path / "BENCH_roofline.json"
+    good.write_text(json.dumps({
+        "backend": "cpu", "peak": {"gflops": 1.0},
+        "kernels": [{"kernel": "k", "flops": 1.0, "bytes": 2.0,
+                     "wall_us": 3.0}]}))
+    assert validate_bench(good)["backend"] == "cpu"
+
+    bad = tmp_path / "BENCH_serve.json"
+    bad.write_text(json.dumps({"config": {}, "paged": {}, "legacy": {}}))
+    with pytest.raises(SchemaError, match="pool_utilization"):
+        validate_bench(bad)
+
+    row = tmp_path / "BENCH_roofline2.json"
+    row.write_text(json.dumps({"kernels": [{"kernel": "k"}]}))
+    # unknown stem: only the non-empty-object rule applies
+    assert validate_bench(row)
+
+    broken = tmp_path / "BENCH_x.json"
+    broken.write_text("{not json")
+    with pytest.raises(SchemaError, match="not valid JSON"):
+        validate_bench(broken)
+    empty = tmp_path / "BENCH_y.json"
+    empty.write_text("{}")
+    with pytest.raises(SchemaError, match="non-empty"):
+        validate_bench(empty)
