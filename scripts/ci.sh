@@ -46,20 +46,22 @@ if [[ "${FAST:-0}" == "1" ]]; then
   # run + checkpoint resume through run(), the packed-batch equivalence
   # + fault-recovery rewind proofs, and the jit cache-size proof that
   # the hook pipeline adds zero steady-state recompiles), the
-  # segment-packing layout invariants (tests/data), and the telemetry
-  # schema / probe / golden-report checks (tests/telemetry) — so an
-  # accidental retrace, run-layer, or packing regression fails in seconds,
-  # before
+  # segment-packing layout invariants (tests/data), the telemetry
+  # schema / probe / golden-report checks (tests/telemetry), and the
+  # training-sentinel guard/policy/injected-fault proofs (tests/sentinel)
+  # — so an accidental retrace, run-layer, packing, or anomaly-guard
+  # regression fails in seconds, before
   # the wider suite runs (which then skips those paths to stay within
   # the single TIMEOUT_S wall-clock bound).
   SECONDS=0
   timeout "$TIMEOUT_S" python -m pytest tests/core/test_api.py tests/run \
-      tests/data tests/telemetry -m "not slow" -q
+      tests/data tests/telemetry tests/sentinel -m "not slow" -q
   TIMEOUT_S=$((TIMEOUT_S - SECONDS))
   # `timeout 0` would DISABLE the bound entirely — clamp to >= 1s.
   if (( TIMEOUT_S < 1 )); then TIMEOUT_S=1; fi
   ARGS+=(-m "not slow" --ignore=tests/core/test_api.py --ignore=tests/run
-         --ignore=tests/data --ignore=tests/telemetry)
+         --ignore=tests/data --ignore=tests/telemetry
+         --ignore=tests/sentinel)
 fi
 
 exec timeout "$TIMEOUT_S" python -m pytest "${ARGS[@]}" "$@"

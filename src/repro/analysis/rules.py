@@ -1,4 +1,4 @@
-"""repro-lint rule set R1..R6.
+"""repro-lint rule set R1..R7.
 
 Each rule is a stateless object with ``id``, ``title``, ``invariant``
 (what guarantee it protects — surfaced by ``--list-rules`` and the DESIGN
@@ -796,6 +796,74 @@ class SpecDrift:
 
 
 # --------------------------------------------------------------------------
+# R7 — exception hygiene
+# --------------------------------------------------------------------------
+
+_BROAD_EXC = {"Exception", "BaseException"}
+
+
+class ExceptionHygiene:
+    """Bare ``except:`` and broad handlers that swallow silently: the
+    sentinel/retry/rollback machinery (PR 10) classifies failures into
+    *transient* (retry), *anomalous* (skip/rollback) and *fatal*
+    (propagate) — a handler that catches everything and does nothing
+    erases that classification, hides real faults (including
+    AnomalyBudgetExceeded, SimulatedKill, preemption signals) and turns
+    loud failures into silent corruption.  Catch the narrow type, or
+    handle-and-log, or re-raise."""
+
+    id = "R7"
+    title = "exception-hygiene"
+    invariant = ("no bare except; broad Exception handlers must act "
+                 "(log/re-raise/recover), never silently swallow")
+
+    def check(self, model: ModuleModel) -> list:
+        if model.is_test:
+            return []
+        out = []
+        for node in ast.walk(model.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                out.append(model.finding(
+                    self.id, node,
+                    "bare `except:` — catches SystemExit/KeyboardInterrupt"
+                    "/SimulatedKill too; name the exception type"))
+            elif self._catches_broad(node.type) and \
+                    self._swallows(node.body):
+                out.append(model.finding(
+                    self.id, node,
+                    "`except Exception` with a no-op body silently "
+                    "swallows every failure — catch the narrow type, or "
+                    "log/re-raise"))
+        return out
+
+    @staticmethod
+    def _catches_broad(type_node: ast.AST) -> bool:
+        elts = (type_node.elts if isinstance(type_node, ast.Tuple)
+                else [type_node])
+        for e in elts:
+            if isinstance(e, ast.Name) and e.id in _BROAD_EXC:
+                return True
+            if isinstance(e, ast.Attribute) and e.attr in _BROAD_EXC:
+                return True
+        return False
+
+    @staticmethod
+    def _swallows(body: list) -> bool:
+        """True when the handler body does nothing observable: only
+        ``pass``, ``...``, docstring constants, or ``continue``."""
+        for stmt in body:
+            if isinstance(stmt, (ast.Pass, ast.Continue)):
+                continue
+            if isinstance(stmt, ast.Expr) and \
+                    isinstance(stmt.value, ast.Constant):
+                continue
+            return False
+        return True
+
+
+# --------------------------------------------------------------------------
 
 
 def _str_constants(node: ast.AST) -> set:
@@ -804,6 +872,7 @@ def _str_constants(node: ast.AST) -> set:
 
 
 ALL_RULES = (RecompileHazard(), HostSyncInHotPath(), DonationSafety(),
-             PallasHygiene(), TracedImpurity(), SpecDrift())
+             PallasHygiene(), TracedImpurity(), SpecDrift(),
+             ExceptionHygiene())
 
 RULES_BY_ID = {r.id: r for r in ALL_RULES}

@@ -39,7 +39,19 @@ def _flatten_with_paths(tree):
     return leaves, treedef
 
 
+class CorruptCheckpoint(RuntimeError):
+    """A complete-looking checkpoint failed payload validation (missing,
+    truncated, or garbled leaf file, or a shape/dtype mismatch)."""
+
+
 class CheckpointManager:
+    # Dropped into a checkpoint dir when restore finds its payload
+    # corrupt (truncated/garbled leaf, shape/dtype/size mismatch): the
+    # dir keeps its ``_COMPLETE`` marker but becomes invisible to
+    # discovery, so latest-step restore falls back to the previous
+    # complete step and ``gc_incomplete`` reclaims the disk.
+    DAMAGED_MARKER = "_DAMAGED"
+
     def __init__(self, directory: str | Path, *, keep_last: int = 3,
                  async_write: bool = True, gc_incomplete: bool = False):
         self.dir = Path(directory)
@@ -52,16 +64,18 @@ class CheckpointManager:
 
     def gc_incomplete(self) -> list[str]:
         """Remove crash-orphaned partial checkpoints: ``_tmp_step_*``
-        staging dirs and any ``step_*`` dir missing its ``_COMPLETE``
-        marker.  Discovery (``_complete_steps``) already ignores them, so
-        this is pure disk hygiene — restore semantics are unchanged.
-        Returns the removed dir names."""
+        staging dirs, any ``step_*`` dir missing its ``_COMPLETE``
+        marker, and any dir restore flagged ``_DAMAGED`` (payload failed
+        validation).  Discovery (``_complete_steps``) already ignores
+        them, so this is pure disk hygiene — restore semantics are
+        unchanged.  Returns the removed dir names."""
         removed = []
         for p in sorted(self.dir.glob("_tmp_step_*")):
             shutil.rmtree(p, ignore_errors=True)
             removed.append(p.name)
         for p in sorted(self.dir.glob("step_*")):
-            if p.is_dir() and not (p / "_COMPLETE").exists():
+            if p.is_dir() and (not (p / "_COMPLETE").exists()
+                               or (p / self.DAMAGED_MARKER).exists()):
                 shutil.rmtree(p, ignore_errors=True)
                 removed.append(p.name)
         return removed
@@ -94,7 +108,10 @@ class CheckpointManager:
                 np.save(tmp / fname, a)
                 manifest["leaves"].append(
                     {"file": fname, "shape": list(a.shape),
-                     "dtype": str(a.dtype)})
+                     "dtype": str(a.dtype),
+                     # payload size on disk: lets restore detect a
+                     # truncated leaf without parsing it
+                     "nbytes": (tmp / fname).stat().st_size})
             (tmp / "manifest.json").write_text(json.dumps(manifest))
             (tmp / "_COMPLETE").touch()
             if final.exists():
@@ -122,7 +139,8 @@ class CheckpointManager:
     def _complete_steps(self) -> list[int]:
         out = []
         for p in self.dir.glob("step_*"):
-            if (p / "_COMPLETE").exists():
+            if ((p / "_COMPLETE").exists()
+                    and not (p / self.DAMAGED_MARKER).exists()):
                 out.append(int(p.name.split("_")[1]))
         return out
 
@@ -156,26 +174,78 @@ class CheckpointManager:
         if marker.exists():
             marker.unlink()
 
+    def _flag_damaged(self, d: Path, err: str) -> None:
+        try:
+            (d / self.DAMAGED_MARKER).write_text(err)
+        except OSError:
+            pass   # flagging is best-effort; discovery re-validates anyway
+
+    def _load_leaves(self, d: Path) -> tuple[dict, list]:
+        """Read and validate one checkpoint dir's payload.  Raises
+        :class:`CorruptCheckpoint` on any missing, truncated, garbled, or
+        mismatched leaf — the caller decides whether to fall back."""
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            raise CorruptCheckpoint(f"{d.name}: unreadable manifest: {e}")
+        leaves = []
+        for meta in manifest["leaves"]:
+            f = d / meta["file"]
+            if not f.exists():
+                raise CorruptCheckpoint(f"{d.name}: missing leaf {meta['file']}")
+            want = meta.get("nbytes")   # absent in pre-v10 checkpoints
+            if want is not None and f.stat().st_size != want:
+                raise CorruptCheckpoint(
+                    f"{d.name}: {meta['file']} is {f.stat().st_size} bytes, "
+                    f"manifest says {want} (truncated?)")
+            try:
+                a = np.load(f)
+            except Exception as e:
+                raise CorruptCheckpoint(
+                    f"{d.name}: {meta['file']} unparseable: {e}")
+            if list(a.shape) != meta["shape"] or str(a.dtype) != meta["dtype"]:
+                raise CorruptCheckpoint(
+                    f"{d.name}: {meta['file']} is {a.dtype}{list(a.shape)}, "
+                    f"manifest says {meta['dtype']}{meta['shape']}")
+            leaves.append(a)
+        if len(leaves) != manifest.get("n_leaves", len(leaves)):
+            raise CorruptCheckpoint(
+                f"{d.name}: {len(leaves)} leaves vs n_leaves="
+                f"{manifest.get('n_leaves')}")
+        return manifest, leaves
+
     def restore(self, step: Optional[int] = None, *,
                 template: Any = None, shardings: Any = None
                 ) -> tuple[int, Any, dict]:
         """Load a checkpoint; re-shard onto ``shardings`` if given.
 
         ``template`` (a pytree with the same structure) is required to
-        rebuild the tree; shapes/dtypes are validated against the manifest.
-        Returns (step, tree, extra).
+        rebuild the tree; shapes/dtypes/sizes are validated against the
+        manifest.  With ``step=None`` a checkpoint whose payload fails
+        validation is flagged ``_DAMAGED`` and restore falls back to the
+        next older complete step; an explicit ``step`` raises
+        :class:`CorruptCheckpoint` instead.  Returns (step, tree, extra).
         """
         if step is None:
-            step = self.latest_step()
-            if step is None:
+            candidates = sorted(self._complete_steps(), reverse=True)
+            if not candidates:
                 raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        d = self.dir / f"step_{step:09d}"
-        manifest = json.loads((d / "manifest.json").read_text())
-        leaves = []
-        for meta in manifest["leaves"]:
-            a = np.load(d / meta["file"])
-            assert list(a.shape) == meta["shape"], (a.shape, meta)
-            leaves.append(a)
+            manifest = leaves = None
+            for s in candidates:
+                d = self.dir / f"step_{s:09d}"
+                try:
+                    manifest, leaves = self._load_leaves(d)
+                except CorruptCheckpoint as e:
+                    self._flag_damaged(d, str(e))
+                    continue
+                step = s
+                break
+            if manifest is None:
+                raise CorruptCheckpoint(
+                    f"every complete checkpoint in {self.dir} is damaged")
+        else:
+            d = self.dir / f"step_{step:09d}"
+            manifest, leaves = self._load_leaves(d)
         assert template is not None, "restore requires a template pytree"
         treedef = jax.tree_util.tree_structure(template)
         tmpl_leaves = treedef.flatten_up_to(template)

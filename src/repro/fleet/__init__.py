@@ -15,8 +15,8 @@ layer that uses them (DESIGN.md §"Elastic training fleet"):
                    crash-isolated, individually resumable members with
                    one merged, ranked report (``launch/sweep.py`` CLI).
 """
-from repro.fleet.chaos import ChaosReport, KillAtHook, SimulatedKill, \
-    chaos_run
+from repro.fleet.chaos import (INJECT_KINDS, ChaosReport, Injection,
+                               KillAtHook, SimulatedKill, chaos_run)
 from repro.fleet.elastic import ElasticCheckpoints, mesh_from_spec, \
     program_shardings, run_elastic
 from repro.fleet.preempt import PREEMPTED_EXIT_CODE, Preempted, \
@@ -29,6 +29,7 @@ __all__ = [
     "ElasticCheckpoints",
     "Preempted", "PreemptionHook", "PREEMPTED_EXIT_CODE",
     "SimulatedKill", "KillAtHook", "chaos_run", "ChaosReport",
+    "Injection", "INJECT_KINDS",
     "expand_grid", "apply_overrides", "materialize", "member_name",
     "SweepMember", "run_sweep", "build_report",
 ]

@@ -12,6 +12,13 @@ via the normal ``checkpoint.resume`` path, until one survives to the end.
 Because the data/eval streams are pure functions of the step and
 checkpoints are atomic, the surviving run's record must equal the
 uninterrupted run's — ``tests/fleet/test_chaos.py`` asserts it bitwise.
+
+The PR 10 sentinel extends the harness from process deaths to *optimizer
+faults*: pass ``inject=Injection(kind="nan_grads", at_step=k)`` (re-
+exported here from :mod:`repro.sentinel.inject`) through ``run_kw`` and
+the in-graph guard takes the hit instead of the moments — injected chaos
+runs must complete, skip the poisoned update bitwise, and still resume
+bitwise across kills (``tests/sentinel/test_injected_run.py``).
 """
 from __future__ import annotations
 
@@ -19,6 +26,7 @@ import dataclasses
 from typing import Sequence
 
 from repro.run import hooks as hooks_lib
+from repro.sentinel.inject import INJECT_KINDS, Injection  # noqa: F401 (re-export)
 
 
 class SimulatedKill(BaseException):

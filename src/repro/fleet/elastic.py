@@ -60,20 +60,26 @@ def mesh_from_spec(mesh: MeshSpec) -> Mesh:
 
 
 def program_shardings(program: StepProgram, mesh: Mesh):
-    """(params, opt_state, batch, hparams) NamedShardings for the
-    program's abstract signature on ``mesh`` — derived from the partition
-    rules, so the elastic step is sharded exactly like the production
-    pjit path."""
+    """(params, opt_state, batch, hparams[, sentinel]) NamedShardings for
+    the program's abstract signature on ``mesh`` — derived from the
+    partition rules, so the elastic step is sharded exactly like the
+    production pjit path.  The sentinel slot (five 0-d scalars,
+    replicated) appears only when the program carries the guard, matching
+    ``abstract_args``."""
     axes = R.MeshAxes(mesh)
-    params_sds, opt_sds, batch_sds, hp_sds = program.abstract_args()
+    args = program.abstract_args()
+    params_sds, opt_sds, batch_sds, hp_sds = args[:4]
     p_specs = R.param_pspecs(params_sds, axes)
     o_specs = R.opt_pspecs(opt_sds, params_sds, p_specs, axes)
     b_specs = R.batch_pspecs(batch_sds, axes)
     rep = NamedSharding(mesh, P())
-    return (R.to_shardings(p_specs, mesh),
-            R.to_shardings(o_specs, mesh),
-            R.to_shardings(b_specs, mesh),
-            jax.tree.map(lambda _: rep, hp_sds))
+    out = (R.to_shardings(p_specs, mesh),
+           R.to_shardings(o_specs, mesh),
+           R.to_shardings(b_specs, mesh),
+           jax.tree.map(lambda _: rep, hp_sds))
+    if len(args) == 5:
+        out += (jax.tree.map(lambda _: rep, args[4]),)
+    return out
 
 
 class ElasticCheckpoints:
@@ -98,7 +104,7 @@ class ElasticCheckpoints:
 def run_elastic(spec: RunSpec, *, arch=None, hooks=(), params=None,
                 opt_state=None, batch_iter=None, eval_iter=None,
                 ckpt_manager=None, start_step: int = 0, groups=None,
-                log_fn=print):
+                inject=None, log_fn=print):
     """``run()`` with the step executed on the ``spec.mesh.shape`` mesh.
 
     Called by ``run()`` itself whenever the spec names a mesh shape; the
@@ -109,8 +115,9 @@ def run_elastic(spec: RunSpec, *, arch=None, hooks=(), params=None,
     through :class:`ElasticCheckpoints`, landing state on the new mesh.
     """
     mesh = mesh_from_spec(spec.mesh)
-    program = build_step_program(spec, arch, groups=groups)
-    p_sh, o_sh, b_sh, hp_sh = program_shardings(program, mesh)
+    program = build_step_program(spec, arch, groups=groups, inject=inject)
+    shardings = program_shardings(program, mesh)
+    p_sh, o_sh, b_sh, hp_sh = shardings[:4]
 
     # out_shardings pins the donated (params, opt_state) outputs to the
     # *input* shardings: without it GSPMD may propagate a different
@@ -118,16 +125,31 @@ def run_elastic(spec: RunSpec, *, arch=None, hooks=(), params=None,
     # next step's in_shardings reject the fed-back state.  loss/metrics
     # are scalars — replicated.
     rep = NamedSharding(mesh, P())
-    sharded_step = jax.jit(program.fn,
-                           in_shardings=(p_sh, o_sh, b_sh, hp_sh),
-                           out_shardings=(p_sh, o_sh, rep, rep),
-                           donate_argnums=(0, 1))
+    if len(shardings) == 5:
+        # sentinel-guarded 5-arg signature: the SentinelState rides
+        # replicated through the same jitted step
+        sent_sh = shardings[4]
+        sharded_step = jax.jit(
+            program.fn,
+            in_shardings=(p_sh, o_sh, b_sh, hp_sh, sent_sh),
+            out_shardings=(p_sh, o_sh, rep, rep, sent_sh),
+            donate_argnums=(0, 1))
 
-    def step(params, opt_state, batch, hp):
-        # commit the host batch to its mesh sharding before dispatch (the
-        # runner materializes batches on the default device otherwise)
-        batch = jax.device_put(batch, b_sh)
-        return sharded_step(params, opt_state, batch, hp)
+        def step(params, opt_state, batch, hp, sent):
+            batch = jax.device_put(batch, b_sh)
+            return sharded_step(params, opt_state, batch, hp, sent)
+    else:
+        sharded_step = jax.jit(program.fn,
+                               in_shardings=(p_sh, o_sh, b_sh, hp_sh),
+                               out_shardings=(p_sh, o_sh, rep, rep),
+                               donate_argnums=(0, 1))
+
+        def step(params, opt_state, batch, hp):
+            # commit the host batch to its mesh sharding before dispatch
+            # (the runner materializes batches on the default device
+            # otherwise)
+            batch = jax.device_put(batch, b_sh)
+            return sharded_step(params, opt_state, batch, hp)
 
     step._cache_size = sharded_step._cache_size  # zero-recompile introspection
     program.step = step

@@ -276,10 +276,13 @@ def _member_stats(member: SweepMember) -> dict:
         # gauge records out of the step statistics.
         from repro.telemetry.schema import classify, iter_data_records
         steps, tps, events, last_loss = [], [], {}, None
+        anomalies = 0
         for r in iter_data_records(metrics.read_text().splitlines()):
             kind = classify(r)
             if kind == "event":
                 events[r["event"]] = events.get(r["event"], 0) + 1
+            elif kind == "anomaly":
+                anomalies += 1
             elif kind == "step":
                 steps.append(r["step"])
                 last_loss = r.get("loss", last_loss)
@@ -294,6 +297,8 @@ def _member_stats(member: SweepMember) -> dict:
             stats["mean_tokens_per_s"] = sum(tps[1:]) / len(tps[1:])
         if events:
             stats["events"] = events
+        if anomalies:
+            stats["anomalies"] = anomalies
     return stats
 
 

@@ -19,12 +19,13 @@ from repro.run.runner import RunContext, RunResult, run
 from repro.run.spec import (DEFAULT_LRS, CheckpointSpec, EvalSpec,
                             FaultSpec, MeshSpec, ModelSpec, OptSpec,
                             ProfileSpec, RunSpec, StepSpec)
+from repro.sentinel.spec import SentinelSpec
 from repro.telemetry.probes import ObservabilitySpec
 
 __all__ = [
     "RunSpec", "ModelSpec", "OptSpec", "StepSpec", "MeshSpec",
     "CheckpointSpec", "EvalSpec", "FaultSpec", "ProfileSpec",
-    "ObservabilitySpec",
+    "ObservabilitySpec", "SentinelSpec",
     "DEFAULT_LRS",
     "StepProgram", "build_step_program",
     "Hook", "StepEvent", "HistoryHook", "LoggingHook", "MetricsHook",

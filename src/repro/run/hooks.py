@@ -216,6 +216,15 @@ class MetricsHook(Hook):
         straggler steps, preemption) to the JSONL stream."""
         self._append({"event": kind, "step": int(step), **payload})
 
+    def record_anomaly(self, step: int, reason: str, **payload) -> None:
+        """Append an ``anomaly`` record (training-sentinel verdicts:
+        schema kind ``anomaly``, marker = the detection reason).  Rides
+        the same rewind contract as every step-keyed record: a rollback's
+        own record is written *after* on_recover truncation, stamped with
+        the restored step, so it survives in the merged stream."""
+        self._append(jsonify(
+            {"anomaly": reason, "step": int(step), **payload}))
+
     def _record_probes(self, ctx, step: int, health) -> None:
         """Record the step's optimizer-health pytree (already host-side)
         as probe records at the ObservabilitySpec cadence.  The device
@@ -251,9 +260,14 @@ class MetricsHook(Hook):
         self._append(rec)
 
     def on_recover(self, ctx, restored_step: int) -> None:
+        # Step-keyed records rewind (the replay re-emits them); ``event``
+        # records are the host-side incident log (recover, preempt,
+        # heartbeat stalls) — replay never re-emits those, so truncating
+        # them would erase real faults from the audit trail.
         with self._lock:
             self.records = [r for r in self.records
-                            if r.get("step", restored_step) < restored_step]
+                            if "event" in r
+                            or r.get("step", restored_step) < restored_step]
             self._rewrite()
 
     def on_exit(self, ctx) -> None:
@@ -334,8 +348,13 @@ class CheckpointHook(Hook):
 
     def on_step_end(self, ctx, ev: StepEvent) -> None:
         if self.every and (ev.step + 1) % self.every == 0:
+            extra = {"data_step": ev.step + 1}
+            if getattr(ctx, "sentinel", None) is not None:
+                # monitor counters + device-state snapshot: a resumed run
+                # rebuilds the sentinel's cross-step memory bitwise
+                extra["sentinel"] = ctx.sentinel.to_extra()
             self.manager.save(ev.step + 1, (ctx.params, ctx.opt_state),
-                              extra={"data_step": ev.step + 1})
+                              extra=extra)
 
     def on_exit(self, ctx) -> None:
         self.manager.wait()

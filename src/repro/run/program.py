@@ -92,12 +92,26 @@ class StepProgram:
             self._loss_fn = jax.jit(self.arch.make_loss_fn())
         return self._loss_fn
 
+    # ---------------- sentinel ----------------
+    @property
+    def sentinel_enabled(self) -> bool:
+        return self.spec.sentinel.enabled
+
+    def init_sentinel(self):
+        """Fresh device SentinelState, or None when the guard is off."""
+        if not self.sentinel_enabled:
+            return None
+        from repro.sentinel.guard import init_sentinel_state
+        return init_sentinel_state()
+
     # ---------------- introspection ----------------
     def abstract_args(self) -> tuple:
-        """(params, opt_state, batch, hparams) as ShapeDtypeStruct pytrees —
-        the jit signature, derived from the spec with zero allocation.
-        This is what makes dry-run lower the identical program it would
-        train."""
+        """(params, opt_state, batch, hparams[, sentinel]) as
+        ShapeDtypeStruct pytrees — the jit signature, derived from the
+        spec with zero allocation.  This is what makes dry-run lower the
+        identical program it would train.  The sentinel slot appears only
+        when ``spec.sentinel.enabled`` (4-tuple otherwise — the pre-
+        sentinel signature every existing consumer unpacks)."""
         if self.spec.data is None:
             raise ValueError("abstract_args requires spec.data")
         params_sds = jax.eval_shape(
@@ -109,6 +123,10 @@ class StepProgram:
         hp_sds = jax.tree.map(
             lambda _: jax.ShapeDtypeStruct((), jnp.float32),
             self.hparams_fn(1))
+        if self.sentinel_enabled:
+            from repro.sentinel.guard import init_sentinel_state
+            sent_sds = jax.eval_shape(init_sentinel_state)
+            return params_sds, opt_sds, batch_sds, hp_sds, sent_sds
         return params_sds, opt_sds, batch_sds, hp_sds
 
     def lower(self):
@@ -124,8 +142,8 @@ class StepProgram:
 def build_step_program(spec: RunSpec, arch=None, opt: Optional[Opt] = None,
                        *, groups=None, residual_constraint=None,
                        grad_constraint=None, param_constraint=None,
-                       global_grad_norm=None, donate: bool = True
-                       ) -> StepProgram:
+                       global_grad_norm=None, donate: bool = True,
+                       inject=None) -> StepProgram:
     """Assemble the :class:`StepProgram` for ``spec``.
 
     ``arch`` defaults to the registry lookup of ``spec.model``; pass an
@@ -134,6 +152,9 @@ def build_step_program(spec: RunSpec, arch=None, opt: Optional[Opt] = None,
     no-decay-on-1-D grouping when the rule has a ``weight_decay`` hparam.
     The sharding-constraint kwargs mirror ``arch.make_fused_train_step``
     (fused path only) so dry-run cells build through this same function.
+    ``inject`` (a :class:`repro.sentinel.inject.Injection`) arms the
+    in-graph fault injector inside the sentinel guard — it requires
+    ``spec.sentinel.enabled`` because the guard owns the injection point.
     """
     if arch is None:
         from repro.models.registry import get_arch
@@ -217,7 +238,22 @@ def build_step_program(spec: RunSpec, arch=None, opt: Optional[Opt] = None,
             params2, opt2 = opt.step(params, grads, opt_state, hp)
             return params2, opt2, loss, metrics
 
-    if spec.observe.enabled:
+    if inject is not None and not spec.sentinel.enabled:
+        raise ValueError("fault injection requires spec.sentinel.enabled "
+                         "(the sentinel guard owns the injection point)")
+    if spec.sentinel.enabled:
+        # Sentinel guard folds into the SAME jitted program (the step
+        # signature grows a SentinelState slot): in-graph detection, the
+        # jnp.where skip-commit, and the verdict in metrics["sentinel"]
+        # riding the runner's one bundled device_get.  When probes are
+        # also enabled the guard computes them itself on the COMMITTED
+        # transition — a skipped step reports what actually landed.
+        from repro.sentinel.guard import guard_step
+        one_step = guard_step(
+            one_step, opt=opt, sspec=spec.sentinel,
+            ospec=spec.observe if spec.observe.enabled else None,
+            inject=inject)
+    elif spec.observe.enabled:
         # Optimizer-health probes fold into the SAME jitted program: the
         # probe reductions are in-graph (constant metrics structure, so
         # no recompiles) and their scalars ride the runner's one bundled

@@ -67,6 +67,9 @@ class RunContext:
     hooks: tuple
     ckpt_manager: Any = None
     start_step: int = 0
+    # SentinelMonitor when spec.sentinel.enabled (CheckpointHook persists
+    # its to_extra() so resume rebuilds the device SentinelState exactly).
+    sentinel: Any = None
 
     def dispatch_eval(self, step: int, metrics: dict) -> None:
         for h in self.hooks:
@@ -141,7 +144,7 @@ def run(spec: RunSpec, *, arch=None, program: Optional[StepProgram] = None,
         hooks: Sequence[hooks_lib.Hook] = (), params=None, opt_state=None,
         batch_iter: Optional[Iterator[dict]] = None, eval_iter=None,
         ckpt_manager=None, start_step: int = 0, groups=None,
-        log_fn: Callable[[str], None] = print) -> RunResult:
+        inject=None, log_fn: Callable[[str], None] = print) -> RunResult:
     """Drive one run end-to-end.  Overrides (all optional):
 
     ``arch``       an Arch instance for ad-hoc configs (else registry);
@@ -155,7 +158,10 @@ def run(spec: RunSpec, *, arch=None, program: Optional[StepProgram] = None,
                    complete step and fast-forwards the data stream;
     ``hooks``      appended after the default pipeline (same-class user
                    hooks replace the default instance);
-    ``start_step`` begin mid-schedule without a checkpoint.
+    ``start_step`` begin mid-schedule without a checkpoint;
+    ``inject``     an in-graph fault :class:`~repro.sentinel.inject.
+                   Injection` (chaos harness; requires
+                   ``spec.sentinel.enabled`` and no prebuilt program).
     """
     if program is None:
         if spec.mesh.shape is not None:
@@ -167,9 +173,20 @@ def run(spec: RunSpec, *, arch=None, program: Optional[StepProgram] = None,
                                opt_state=opt_state, batch_iter=batch_iter,
                                eval_iter=eval_iter, ckpt_manager=ckpt_manager,
                                start_step=start_step, groups=groups,
-                               log_fn=log_fn)
-        program = build_step_program(spec, arch, groups=groups)
+                               inject=inject, log_fn=log_fn)
+        program = build_step_program(spec, arch, groups=groups,
+                                     inject=inject)
+    elif inject is not None:
+        raise ValueError("inject requires run() to build the program "
+                         "(pass inject to build_step_program instead)")
     arch = program.arch
+
+    # --- training sentinel (host side) --------------------------------
+    monitor = None
+    sent = program.init_sentinel()
+    if program.sentinel_enabled:
+        from repro.sentinel.policy import SentinelMonitor
+        monitor = SentinelMonitor(spec.sentinel)
 
     if params is None:
         params, opt_state = program.init(spec.seed)
@@ -190,15 +207,36 @@ def run(spec: RunSpec, *, arch=None, program: Optional[StepProgram] = None,
         from repro.checkpoint.manager import CheckpointManager
         ckpt_manager = CheckpointManager(ck.dir, keep_last=ck.keep_last,
                                          gc_incomplete=ck.gc_incomplete)
+    def _restore_sentinel(extra):
+        """Rebuild monitor + device SentinelState from checkpoint extra —
+        bitwise resume includes the sentinel's cross-step memory."""
+        nonlocal sent
+        snap = (extra or {}).get("sentinel")
+        if monitor is None or not snap:
+            return
+        from repro.sentinel.guard import state_from_snapshot
+        monitor.load_extra(snap)
+        if snap.get("state"):
+            sent = state_from_snapshot(snap["state"])
+
     if (ckpt_manager is not None and ck.resume
             and ckpt_manager.latest_step() is not None):
         start_step, (params, opt_state), _extra = ckpt_manager.restore(
             template=(params, opt_state))
+        _restore_sentinel(_extra)
         log_fn(f"resumed from step {start_step}")
+
+    def _train_iter(s):
+        """The step-keyed train stream from step ``s`` — with quarantined
+        ranges substituted when the sentinel has rolled back."""
+        if monitor is not None:
+            from repro.sentinel.policy import quarantined_batch_iter
+            return quarantined_batch_iter(spec, arch, s, monitor)
+        return make_batch_iter(spec, arch, s)
 
     own_batch_iter = batch_iter is None
     if batch_iter is None:
-        batch_iter = make_batch_iter(spec, arch, start_step)
+        batch_iter = _train_iter(start_step)
     eval_factory = None
     if eval_iter is None and spec.eval.every and spec.data is not None:
         # The default held-out stream is a pure function of how many eval
@@ -214,7 +252,8 @@ def run(spec: RunSpec, *, arch=None, program: Optional[StepProgram] = None,
                               user_hooks=hooks)
     ctx = RunContext(spec=spec, program=program, params=params,
                      opt_state=opt_state, log=log_fn, hooks=pipeline,
-                     ckpt_manager=ckpt_manager, start_step=start_step)
+                     ckpt_manager=ckpt_manager, start_step=start_step,
+                     sentinel=monitor)
 
     # Transient-failure policy: the jitted step donates (params, opt_state),
     # so a failed call may have consumed its input buffers — re-invoking
@@ -239,8 +278,13 @@ def run(spec: RunSpec, *, arch=None, program: Optional[StepProgram] = None,
             batch = jax.tree.map(jnp.asarray, next(batch_iter))
             hp = program.hparams_fn(step + 1)
             try:
-                ctx.params, ctx.opt_state, loss, metrics = program.step(
-                    ctx.params, ctx.opt_state, batch, hp)
+                if sent is None:
+                    ctx.params, ctx.opt_state, loss, metrics = program.step(
+                        ctx.params, ctx.opt_state, batch, hp)
+                else:
+                    (ctx.params, ctx.opt_state, loss, metrics,
+                     sent) = program.step(ctx.params, ctx.opt_state, batch,
+                                          hp, sent)
             except retriable as e:
                 failures += 1
                 if ckpt_manager is not None:
@@ -258,16 +302,30 @@ def run(spec: RunSpec, *, arch=None, program: Optional[StepProgram] = None,
                                and ckpt_manager.latest_step() is not None)
                 if not recoverable:
                     raise
-                restored, (p, s), _ = ckpt_manager.restore(
+                # Deterministic (jitterless) exponential backoff before
+                # the restore: attempt n waits base * 2^(n-1), capped.
+                delay = 0.0
+                if spec.fault.retry_backoff_s > 0:
+                    delay = min(
+                        spec.fault.retry_backoff_s * 2.0 ** (failures - 1),
+                        spec.fault.retry_backoff_max_s)
+                    time.sleep(delay)
+                restored, (p, s), _extra = ckpt_manager.restore(
                     template=(ctx.params, ctx.opt_state))
+                _restore_sentinel(_extra)
                 log_fn(f"step {step} failed ({type(e).__name__}); "
                        f"restored step {restored} "
                        f"(attempt {failures}/{spec.fault.retries})")
                 ctx.params, ctx.opt_state = p, s
-                step = restored
-                batch_iter = make_batch_iter(spec, arch, restored)
+                failed_at, step = step, restored
+                batch_iter = _train_iter(restored)
                 for h in pipeline:
                     h.on_recover(ctx, restored)
+                # after on_recover: the truncation must not eat the event
+                mh = hooks_lib.find_metrics_hook(pipeline)
+                if mh is not None:
+                    mh.annotate("recover", restored, attempt=failures,
+                                failed_step=failed_at, backoff_s=delay)
                 t_last = time.time()
                 continue
             now = time.time()
@@ -280,8 +338,72 @@ def run(spec: RunSpec, *, arch=None, program: Optional[StepProgram] = None,
                                      metrics=metrics_h,
                                      hparams=hp_h, dt=now - t_last)
             t_last = now
+            # The monitor ingests the verdict BEFORE hook dispatch so a
+            # boundary checkpoint persists the current device-state
+            # snapshot; policy *actions* run after the hooks have seen
+            # the step (records first, then recovery).
+            anomalous = False
+            if monitor is not None:
+                verdict = ev.metrics.get("sentinel", {})
+                anomalous = monitor.observe(step, verdict)
             for h in pipeline:
                 h.on_step_end(ctx, ev)
+            if anomalous:
+                spc = spec.sentinel
+                reason = monitor.classify(verdict)
+                mh = hooks_lib.find_metrics_hook(pipeline)
+                rewindable_eval = all(
+                    h.iter_factory is not None for h in pipeline
+                    if isinstance(h, hooks_lib.EvalHook) and h.every)
+                rollback = (monitor.wants_rollback() and own_batch_iter
+                            and rewindable_eval and ckpt_manager is not None
+                            and ckpt_manager.latest_step() is not None)
+                action = ("rollback" if rollback else
+                          "backoff" if "backoff" in spc.ladder else "skip")
+                log_fn(f"sentinel: anomaly at step {step} ({reason}) -> "
+                       f"{action} [{monitor.anomalies}/{spc.budget}]")
+                if monitor.exhausted():
+                    # Loudly, and NOT via a retriable error: a run that
+                    # keeps tripping the guard must not silently spin
+                    # through restore cycles.
+                    from repro.sentinel.policy import AnomalyBudgetExceeded
+                    if mh is not None:
+                        mh.record_anomaly(step, reason, action="abort",
+                                          count=monitor.anomalies)
+                    raise AnomalyBudgetExceeded(
+                        f"anomaly budget exhausted: {monitor.anomalies} "
+                        f"anomalies > budget {spc.budget} "
+                        f"(last: {reason} at step {step})")
+                if rollback:
+                    ckpt_manager.wait()
+                    restored, (p, s), _ = ckpt_manager.restore(
+                        template=(ctx.params, ctx.opt_state))
+                    ctx.params, ctx.opt_state = p, s
+                    monitor.quarantine(restored, step + 1)
+                    # The device SentinelState deliberately carries
+                    # forward: the guard's memory (EMA, seen-clock)
+                    # survives the rewind, which also keeps seen-keyed
+                    # injected faults from re-firing on replay.
+                    batch_iter = _train_iter(restored)
+                    for h in pipeline:
+                        h.on_recover(ctx, restored)
+                    if mh is not None:
+                        mh.record_anomaly(restored, reason,
+                                          action="rollback",
+                                          anomaly_step=step,
+                                          quarantine=[restored, step + 1],
+                                          count=monitor.anomalies)
+                    log_fn(f"sentinel: rolled back to step {restored}; "
+                           f"quarantined steps [{restored}, {step + 1})")
+                    step = restored
+                    t_last = time.time()
+                    continue
+                if mh is not None:
+                    mh.record_anomaly(
+                        step, reason, action=action,
+                        count=monitor.anomalies,
+                        update_norm=verdict.get("update_norm"),
+                        ema_ref=verdict.get("ema_ref"))
             step += 1
     finally:
         for h in pipeline:

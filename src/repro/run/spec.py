@@ -29,6 +29,7 @@ import json
 from typing import Any, Mapping, Optional
 
 from repro.data.pipeline import DataConfig
+from repro.sentinel.spec import SentinelSpec
 from repro.telemetry.probes import ObservabilitySpec
 
 # Paper hyper-parameters (Table 6/7): AdaLomo lr ≈ 5e-4 (IT) / 1e-3
@@ -190,6 +191,11 @@ class FaultSpec:
     # raise Preempted (launchers exit PREEMPTED_EXIT_CODE).  Only active
     # when the run has a checkpoint manager and owns the main thread.
     preempt: bool = True
+    # Deterministic (jitterless) exponential backoff between transient-
+    # failure recoveries: attempt n sleeps min(base * 2**(n-1), max).
+    # base 0.0 = no sleep (restore immediately).
+    retry_backoff_s: float = 0.0
+    retry_backoff_max_s: float = 30.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -208,6 +214,7 @@ class RunSpec:
     profile: ProfileSpec = dataclasses.field(default_factory=ProfileSpec)
     observe: ObservabilitySpec = dataclasses.field(
         default_factory=ObservabilitySpec)
+    sentinel: SentinelSpec = dataclasses.field(default_factory=SentinelSpec)
     log_every: int = 10
     seed: int = 0
     # JSONL metrics export (MetricsHook): step, loss, tokens/s, padding
@@ -256,6 +263,7 @@ class RunSpec:
         sub("fault", FaultSpec)
         sub("profile", ProfileSpec)
         sub("observe", ObservabilitySpec)
+        sub("sentinel", SentinelSpec)
         return cls(**d)
 
     @classmethod
@@ -336,6 +344,25 @@ def add_cli_args(ap) -> None:
                     help="GC crash-orphaned partial checkpoint dirs at start")
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--heartbeat-timeout", type=float, default=0.0)
+    ap.add_argument("--retry-backoff", type=float, default=0.0,
+                    help="transient-failure retry backoff base seconds "
+                         "(deterministic: attempt n sleeps base * 2^(n-1), "
+                         "capped at 30s; 0 = restore immediately)")
+    ap.add_argument("--sentinel", action="store_true",
+                    help="enable the training sentinel: in-graph anomaly "
+                         "guards (non-finite / update-norm spike / trust "
+                         "ratio) with skip/backoff/rollback policies")
+    ap.add_argument("--sentinel-ladder", default="skip",
+                    help="comma-joined policy rungs, 'skip' first "
+                         "(skip[,backoff][,rollback])")
+    ap.add_argument("--sentinel-spike-factor", type=float, default=10.0,
+                    help="anomaly when update norm exceeds this multiple "
+                         "of its clean-step EMA")
+    ap.add_argument("--sentinel-trust-max", type=float, default=0.0,
+                    help="per-group trust-ratio ceiling (0 = guard off)")
+    ap.add_argument("--sentinel-budget", type=int, default=8,
+                    help="lifetime anomaly allowance before the run "
+                         "aborts loudly")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
 
@@ -380,13 +407,20 @@ def from_cli_args(args) -> RunSpec:
                                   gc_incomplete=args.gc_incomplete),
         eval=EvalSpec(every=args.eval_every),
         fault=FaultSpec(heartbeat_timeout_s=args.heartbeat_timeout,
-                        preempt=not args.no_preempt),
+                        preempt=not args.no_preempt,
+                        retry_backoff_s=args.retry_backoff),
         profile=ProfileSpec(dir=args.profile_dir, start=args.profile_start,
                             steps=args.profile_steps),
         observe=ObservabilitySpec(
             optimizer_every=args.observe_every,
             factored_every=args.observe_factored_every,
             sample_tensors=args.observe_tensors),
+        sentinel=SentinelSpec(
+            enabled=args.sentinel,
+            ladder=tuple(p for p in args.sentinel_ladder.split(",") if p),
+            spike_factor=args.sentinel_spike_factor,
+            trust_max=args.sentinel_trust_max,
+            budget=args.sentinel_budget),
         log_every=args.log_every,
         seed=args.seed,
         metrics_path=args.metrics_path)

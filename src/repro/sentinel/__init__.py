@@ -1,0 +1,22 @@
+"""Training sentinel — in-graph anomaly guards, policy ladder, and
+fault-injection proof harness (DESIGN.md §"Training sentinel").
+
+Detection lives in the step program (``guard.py``, constant structure,
+zero steady-state recompiles), policy and quarantine on the host
+(``policy.py``), and the deterministic fault injectors that prove the
+whole loop in ``inject.py``.
+"""
+from repro.sentinel.guard import (SNAPSHOT_KEYS, SentinelState, guard_step,
+                                  init_sentinel_state, state_from_snapshot)
+from repro.sentinel.inject import INJECT_KINDS, Injection
+from repro.sentinel.policy import (QUARANTINE_SEED_OFFSET,
+                                   AnomalyBudgetExceeded, SentinelMonitor,
+                                   quarantined_batch_iter)
+from repro.sentinel.spec import LADDER_RUNGS, SentinelSpec
+
+__all__ = [
+    "SNAPSHOT_KEYS", "SentinelState", "guard_step", "init_sentinel_state",
+    "state_from_snapshot", "INJECT_KINDS", "Injection",
+    "QUARANTINE_SEED_OFFSET", "AnomalyBudgetExceeded", "SentinelMonitor",
+    "quarantined_batch_iter", "LADDER_RUNGS", "SentinelSpec",
+]

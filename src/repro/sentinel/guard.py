@@ -1,0 +1,202 @@
+"""In-graph anomaly guard — detection + skip/backoff commit folded into
+the step program (DESIGN.md §"Training sentinel").
+
+:func:`guard_step` wraps the step program's pure callable (the same slot
+:func:`repro.telemetry.probes.instrument_step` occupies) so that every
+step additionally threads a :class:`SentinelState` pytree and returns a
+verdict inside the metrics pytree under ``"sentinel"``:
+
+* **non-finite guard** — any NaN/Inf in the loss, the updated params, or
+  the updated optimizer moments;
+* **spike guard** — global update norm ``‖Δθ‖`` against a bias-corrected
+  EMA carried in ``SentinelState`` (armed after ``warmup`` clean steps;
+  the fused path never materializes gradients, so the post-normalization
+  update norm is the spike signal — it is what actually lands in the
+  params);
+* **trust guard** — per-GroupSpec trust ratios via
+  :func:`repro.telemetry.probes.group_ratios` against
+  ``SentinelSpec.trust_max`` (0 disables).
+
+On an anomalous verdict the update is discarded **in-graph** with a
+``jnp.where`` select over params AND the full ``OptState`` — moments and
+step counter included — so a skipped step is a true no-op on the
+optimizer.  This must happen in-graph: the runner donates the input
+buffers, so by the time the host sees the verdict the pre-step state is
+already gone.
+
+Contract (asserted in ``tests/sentinel/``): constant structure — the
+verdict, the committed state, and the state snapshot are computed every
+step with the identical jaxpr (``cache_size() == 1``); the verdict rides
+the runner's one bundled per-step ``device_get`` inside metrics (no new
+host syncs, repro-lint R2); the EMA absorbs only clean steps, so one
+anomaly cannot drag the reference level toward the anomaly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sentinel.spec import SentinelSpec
+
+_TINY = 1e-30
+
+#: Metrics keys that snapshot the post-step device state exactly.  Every
+#: value is a 0-d f32 whose payload survives the device→host→checkpoint
+#: →device round trip bitwise (int32 and f32 are exact in binary64).
+SNAPSHOT_KEYS = ("seen", "clean", "ema", "backoff", "skipped")
+
+
+class SentinelState(NamedTuple):
+    """Cross-step sentinel memory — five 0-d scalars.
+
+    seen     executed-step counter (counts every pass through the guard,
+             including skipped and replayed steps — the injection clock);
+    clean    count of clean (committed) steps — the EMA's sample count;
+    ema      EMA of the update norm over clean steps (spike reference);
+    backoff  remaining clean steps of an active lr-backoff window;
+    skipped  lifetime count of discarded updates.
+    """
+
+    seen: jnp.ndarray
+    clean: jnp.ndarray
+    ema: jnp.ndarray
+    backoff: jnp.ndarray
+    skipped: jnp.ndarray
+
+
+def init_sentinel_state() -> SentinelState:
+    return SentinelState(seen=jnp.zeros((), jnp.int32),
+                         clean=jnp.zeros((), jnp.int32),
+                         ema=jnp.zeros((), jnp.float32),
+                         backoff=jnp.zeros((), jnp.int32),
+                         skipped=jnp.zeros((), jnp.int32))
+
+
+def state_from_snapshot(snap: dict) -> SentinelState:
+    """Rebuild the device state from a host snapshot (the ``SNAPSHOT_KEYS``
+    slice of a ``metrics["sentinel"]`` verdict, or checkpoint extra)."""
+    return SentinelState(seen=jnp.asarray(int(snap["seen"]), jnp.int32),
+                         clean=jnp.asarray(int(snap["clean"]), jnp.int32),
+                         ema=jnp.asarray(float(snap["ema"]), jnp.float32),
+                         backoff=jnp.asarray(int(snap["backoff"]), jnp.int32),
+                         skipped=jnp.asarray(int(snap["skipped"]), jnp.int32))
+
+
+def _float_leaves(tree):
+    return [l for l in jax.tree.leaves(tree)
+            if jnp.issubdtype(l.dtype, jnp.floating)]
+
+
+def _all_finite(*trees):
+    ok = jnp.bool_(True)
+    for t in trees:
+        for l in _float_leaves(t):
+            ok = ok & jnp.all(jnp.isfinite(l))
+    return ok
+
+
+def _update_norm(p_old, p_new):
+    """Global ‖Δθ‖ over float leaves (f32 accumulation)."""
+    sq = jnp.zeros((), jnp.float32)
+    for o, n in zip(_float_leaves(p_old), _float_leaves(p_new)):
+        d = n.astype(jnp.float32) - o.astype(jnp.float32)
+        sq = sq + jnp.sum(jnp.square(d))
+    return jnp.sqrt(sq)
+
+
+def guard_step(inner, *, opt, sspec: SentinelSpec, ospec=None, inject=None):
+    """Wrap ``(params, opt_state, batch, hp) -> (params', opt_state',
+    loss, metrics)`` into the 5-arg guarded form ``(params, opt_state,
+    batch, hp, sent) -> (params', opt_state', loss, metrics, sent')``.
+
+    ``ospec`` (an enabled ObservabilitySpec) folds the PR 9 optimizer-
+    health probes in on the **committed** transition — probes describe
+    what actually landed, so a skipped step reports zero update norms.
+    ``inject`` (a :class:`repro.sentinel.inject.Injection`) poisons the
+    batch/update in-graph, keyed on ``sent.seen`` — the fault-injection
+    protocol the chaos harness drives.
+    """
+    decay = jnp.float32(sspec.ema_decay)
+    use_trust = sspec.trust_max > 0.0 and opt is not None
+    use_backoff = "backoff" in sspec.ladder
+
+    def guarded(params, opt_state, batch, hp, sent):
+        # --- backoff: transient lr scale-down, pure call-time data -----
+        lr_scale = jnp.where(use_backoff & (sent.backoff > 0),
+                             jnp.float32(sspec.backoff_scale),
+                             jnp.float32(1.0))
+        hp_eff = dict(hp)
+        hp_eff["lr"] = hp["lr"] * lr_scale
+
+        if inject is not None:
+            batch = inject.poison_batch(batch, sent.seen)
+        p2, s2, loss, metrics = inner(params, opt_state, batch, hp_eff)
+        if inject is not None:
+            p2, s2, loss = inject.poison_update(params, p2, s2, loss,
+                                                sent.seen)
+
+        # --- detection (constant structure, 0-d verdict scalars) -------
+        nonfinite = ~(_all_finite(p2, s2) & jnp.all(jnp.isfinite(loss)))
+        unorm = _update_norm(params, p2)
+
+        n = sent.clean.astype(jnp.float32)
+        ema_ref = sent.ema / jnp.maximum(1.0 - jnp.power(decay, n), _TINY)
+        armed = sent.clean >= sspec.warmup
+        # NaN unorm fails this comparison (NaN > x is False) — the
+        # non-finite guard owns that case.
+        spike = armed & (unorm > jnp.float32(sspec.spike_factor) * ema_ref)
+
+        trust_worst = jnp.zeros((), jnp.float32)
+        trust = jnp.bool_(False)
+        if use_trust:
+            from repro.telemetry.probes import group_ratios
+            ratios = group_ratios(params, p2, opt)
+            trust_worst = jnp.max(jnp.stack(list(ratios.values())))
+            trust = trust_worst > jnp.float32(sspec.trust_max)
+
+        anomaly = nonfinite | spike | trust
+        keep = ~anomaly
+
+        # --- commit: skip is a true no-op on params AND OptState -------
+        sel = lambda new, old: jax.tree.map(
+            lambda a, b: jnp.where(keep, a, b), new, old)
+        p_out = sel(p2, params)
+        s_out = sel(s2, opt_state)
+
+        sent_out = SentinelState(
+            seen=sent.seen + 1,
+            clean=sent.clean + keep.astype(jnp.int32),
+            # the EMA absorbs only clean steps — an anomaly must not drag
+            # the reference toward itself
+            ema=jnp.where(keep, decay * sent.ema + (1.0 - decay) * unorm,
+                          sent.ema),
+            backoff=(jnp.where(anomaly, jnp.int32(sspec.backoff_window),
+                               jnp.maximum(sent.backoff - 1, 0))
+                     if use_backoff else sent.backoff),
+            skipped=sent.skipped + anomaly.astype(jnp.int32))
+
+        f32 = lambda x: x.astype(jnp.float32)
+        verdict = {
+            "anomaly": f32(anomaly), "nonfinite": f32(nonfinite),
+            "spike": f32(spike), "trust": f32(trust),
+            "update_norm": unorm, "ema_ref": ema_ref,
+            "trust_worst": trust_worst, "lr_scale": lr_scale,
+            # post-step state snapshot: lets the host rebuild the device
+            # state exactly (checkpoint extra → state_from_snapshot)
+            "seen": f32(sent_out.seen), "clean": f32(sent_out.clean),
+            "ema": sent_out.ema, "backoff": f32(sent_out.backoff),
+            "skipped": f32(sent_out.skipped),
+        }
+        metrics = {**metrics, "sentinel": verdict}
+
+        if ospec is not None:
+            from repro.telemetry.probes import optimizer_health
+            metrics["opt_health"] = optimizer_health(
+                params, p_out, opt_state, s_out, hp_eff,
+                opt=opt, ospec=ospec)
+
+        return p_out, s_out, loss, metrics, sent_out
+
+    return guarded

@@ -1,0 +1,96 @@
+"""In-graph fault injection — the proof harness for the sentinel.
+
+An :class:`Injection` describes ONE deterministic fault: *what* to poison
+(``kind``) and *when* (``at_step``, measured on ``SentinelState.seen``,
+the executed-step clock).  The guard applies it in-graph via ``jnp.where``
+keyed on ``seen == at_step`` — constant structure, zero recompiles, and
+bitwise-reproducible on re-run.
+
+Keying on ``seen`` rather than the data-step index is deliberate: ``seen``
+counts every pass through the guard and is never rewound, so after a
+rollback the replayed data step has a *different* ``seen`` and the fault
+does not re-fire — an injected run always completes, which is exactly the
+property the chaos tests assert.
+
+Kinds:
+
+``nan_grads`` / ``inf_grads``
+    poison every float leaf of the updated params and moments — the
+    fused path's equivalent of a NaN/Inf gradient (the gradient never
+    materializes; its damage to the update does);
+``nan_loss``
+    poison only the reported loss;
+``nan_batch``
+    poison the float leaves of the input batch before the step runs;
+``spike``
+    scale the update ``Δθ`` by ``scale`` (finite, but large enough to
+    trip the EMA spike guard).
+
+Re-exported from :mod:`repro.fleet.chaos` so chaos scripts have one
+import surface for kills + faults.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+INJECT_KINDS = ("nan_grads", "inf_grads", "nan_loss", "nan_batch", "spike")
+
+
+@dataclasses.dataclass(frozen=True)
+class Injection:
+    """One deterministic in-graph fault.
+
+    kind      one of :data:`INJECT_KINDS`;
+    at_step   fires when ``SentinelState.seen == at_step`` (0-based
+              executed-step clock, immune to rollback replay);
+    scale     update multiplier for ``kind="spike"``.
+    """
+
+    kind: str = "nan_grads"
+    at_step: int = 0
+    scale: float = 100.0
+
+    def __post_init__(self):
+        if self.kind not in INJECT_KINDS:
+            raise ValueError(
+                f"unknown injection kind {self.kind!r}; valid: {INJECT_KINDS}")
+        if self.at_step < 0:
+            raise ValueError(f"at_step must be >= 0, got {self.at_step}")
+
+    # -- in-graph application (called from the guard only) -------------
+
+    def _fire(self, seen):
+        return seen == jnp.int32(self.at_step)
+
+    def poison_batch(self, batch, seen):
+        if self.kind != "nan_batch":
+            return batch
+        fire = self._fire(seen)
+        return _poison_floats(batch, fire, jnp.nan)
+
+    def poison_update(self, p_old, p_new, s_new, loss, seen):
+        fire = self._fire(seen)
+        if self.kind in ("nan_grads", "inf_grads"):
+            bad = jnp.nan if self.kind == "nan_grads" else jnp.inf
+            return (_poison_floats(p_new, fire, bad),
+                    _poison_floats(s_new, fire, bad), loss)
+        if self.kind == "nan_loss":
+            return p_new, s_new, jnp.where(fire, jnp.nan, loss)
+        if self.kind == "spike":
+            scaled = jax.tree.map(
+                lambda o, n: jnp.where(
+                    fire, o + jnp.asarray(self.scale, n.dtype) * (n - o), n)
+                if jnp.issubdtype(n.dtype, jnp.floating) else n,
+                p_old, p_new)
+            return scaled, s_new, loss
+        return p_new, s_new, loss          # nan_batch: handled upstream
+
+
+def _poison_floats(tree, fire, value):
+    return jax.tree.map(
+        lambda l: jnp.where(fire, jnp.asarray(value, l.dtype), l)
+        if jnp.issubdtype(l.dtype, jnp.floating) else l,
+        tree)

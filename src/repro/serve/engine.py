@@ -137,6 +137,7 @@ class PagedServeConfig:
     interpret: bool = False             # Pallas interpret mode (tests)
     telemetry_path: Optional[str] = None  # serve-gauge JSONL stream
     telemetry_every: int = 1            # sample cadence in chunks
+    ttl_s: float = 0.0                  # default request TTL; 0 = none
 
 
 def _bucket_len(n: int, lo: int) -> int:
@@ -147,11 +148,15 @@ def _bucket_len(n: int, lo: int) -> int:
 
 
 class PagedEngine:
-    def __init__(self, arch, params, scfg: PagedServeConfig):
+    def __init__(self, arch, params, scfg: PagedServeConfig, *,
+                 clock=time.monotonic):
         assert arch.supports_paged_serving(), arch.arch_id
         self.arch = arch
         self.params = params
         self.scfg = scfg
+        # injectable monotonic clock: TTL tests advance a fake clock
+        # instead of sleeping
+        self.clock = clock
         B, P, ps = scfg.max_batch, scfg.max_pages_per_seq, scfg.page_size
 
         self.allocator = PageAllocator(scfg.num_pages, ps)
@@ -185,13 +190,23 @@ class PagedEngine:
 
     # ------------------------------------------------------------------ API
     def submit(self, prompt: list[int],
-               max_new_tokens: Optional[int] = None) -> int:
+               max_new_tokens: Optional[int] = None,
+               ttl_s: Optional[float] = None) -> int:
         """Queue a request; it joins the running batch at the next chunk
-        boundary (mid-flight admission). Returns the request id."""
+        boundary (mid-flight admission). Returns the request id.
+
+        ``ttl_s`` overrides ``scfg.ttl_s`` for this request; a request
+        still unfinished when its deadline passes is evicted at the next
+        chunk boundary (status ``timed_out``, pages reclaimed, partial
+        output kept)."""
         if max_new_tokens is None:
             max_new_tokens = self.scfg.max_new_tokens
+        if ttl_s is None:
+            ttl_s = self.scfg.ttl_s
         req = Request(rid=next(self._rid), prompt=list(prompt),
-                      max_new_tokens=max_new_tokens)
+                      max_new_tokens=max_new_tokens,
+                      deadline_s=(self.clock() + ttl_s if ttl_s > 0
+                                  else None))
         self.requests[req.rid] = req
         self.scheduler.submit(req)
         return req.rid
@@ -242,7 +257,12 @@ class PagedEngine:
 
     # ---------------------------------------------------------- scheduling
     def step(self) -> None:
-        """One scheduling round: admit, decode one chunk, retire."""
+        """One scheduling round: expire, admit, decode one chunk, retire."""
+        if self.scheduler.expire(self.clock()):
+            # deactivate the freed slots before the next chunk runs
+            for i, r in enumerate(self.scheduler.slots):
+                if r is None:
+                    self._done[i] = True
         self._admit_all()
         if not self.scheduler.running():
             return

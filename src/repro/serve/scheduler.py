@@ -12,7 +12,11 @@ chunks the engine asks the scheduler to
     the *front*; on re-admission they prefill over prompt + generated
     tokens, which reproduces the decode state exactly);
   * ``finish()`` sequences whose done-mask bit is set (EOS or budget
-    exhausted), returning their pages to the allocator.
+    exhausted), returning their pages to the allocator;
+  * ``expire()`` requests whose TTL deadline has passed — timed-out
+    sequences are evicted at the chunk boundary (queued ones are simply
+    dropped), their pages go back to the pool immediately, and the
+    ``timed_out`` lifetime counter feeds the serve gauges.
 
 The scheduler is pure host-side bookkeeping — it never touches device
 arrays — so its policies are unit-testable without compiling anything.
@@ -26,6 +30,7 @@ from typing import Optional
 from repro.serve.paging import OutOfPages, PageAllocator, pages_for
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+TIMED_OUT = "timed_out"
 
 
 @dataclasses.dataclass
@@ -39,6 +44,7 @@ class Request:
     status: str = QUEUED
     n_cached: int = 0          # tokens currently in the KV cache
     n_preempted: int = 0
+    deadline_s: Optional[float] = None   # absolute clock time; None = no TTL
 
     @property
     def tokens(self) -> list[int]:
@@ -68,7 +74,7 @@ class Scheduler:
         self._admit_idx: dict[int, int] = {}   # rid -> admission order
         # lifetime counters sampled by the serve telemetry gauges
         self.counters = {"admitted": 0, "preempted": 0, "finished": 0,
-                         "evicted_pages": 0}
+                         "evicted_pages": 0, "timed_out": 0}
 
     # ---- queries ----------------------------------------------------------
     def has_work(self) -> bool:
@@ -151,6 +157,30 @@ class Scheduler:
         victim.n_preempted += 1
         self.queue.appendleft(victim)
         return victim
+
+    def expire(self, now: float) -> list[Request]:
+        """Evict every request whose ``deadline_s`` has passed.  Running
+        victims release all pages and their slot; queued victims are just
+        dropped.  Partial output stays on the request (``req.out``) so the
+        caller can still hand back what was generated.  Returns the
+        newly timed-out requests."""
+        expired = []
+        for req in self.running():
+            if req.deadline_s is not None and now >= req.deadline_s:
+                self.alloc.free(req.pages)
+                self.slots[req.slot] = None
+                req.pages = []
+                req.slot = None
+                req.status = TIMED_OUT
+                self.counters["timed_out"] += 1
+                expired.append(req)
+        for req in [r for r in self.queue
+                    if r.deadline_s is not None and now >= r.deadline_s]:
+            self.queue.remove(req)
+            req.status = TIMED_OUT
+            self.counters["timed_out"] += 1
+            expired.append(req)
+        return expired
 
     def finish(self, req: Request) -> None:
         """EOS / budget exhausted: release pages, free the slot."""

@@ -33,18 +33,22 @@ def _mean(xs: list) -> Optional[float]:
 
 
 def _summarize_train(streams: Sequence[TelemetryStream]) -> Optional[dict]:
-    steps, events, probes = [], {}, {}
+    steps, events, probes, anomalies = [], {}, {}, {}
+    anomaly_last = None
     for st in streams:
         steps.extend(st.steps())
         for r in st.events():
             events[r["event"]] = events.get(r["event"], 0) + 1
+        for r in st.anomalies():
+            anomalies[r["anomaly"]] = anomalies.get(r["anomaly"], 0) + 1
+            anomaly_last = r["step"]
         for r in st.probes():
             fam = probes.setdefault(r["probe"], {"records": 0})
             fam["records"] += 1
             fam["last_step"] = r["step"]
             fam["last"] = {k: v for k, v in r.items()
                            if k not in ("probe", "step")}
-    if not steps and not probes and not events:
+    if not steps and not probes and not events and not anomalies:
         return None
     out: dict = {"steps": len(steps)}
     if steps:
@@ -69,6 +73,10 @@ def _summarize_train(streams: Sequence[TelemetryStream]) -> Optional[dict]:
             out["padding_efficiency"] = {"final": pe[-1], "mean": _mean(pe)}
     if events:
         out["events"] = dict(sorted(events.items()))
+    if anomalies:
+        out["anomalies"] = {"records": sum(anomalies.values()),
+                            "by_reason": dict(sorted(anomalies.items())),
+                            "last_step": anomaly_last}
     if probes:
         out["probes"] = dict(sorted(probes.items()))
     return out
@@ -96,7 +104,7 @@ def _summarize_serve(streams: Sequence[TelemetryStream]) -> Optional[dict]:
                            default=0),
     }
     for key in ("admitted", "preempted", "finished", "evicted_pages",
-                "prefill_s", "decode_s", "chunks"):
+                "timed_out", "prefill_s", "decode_s", "chunks"):
         if key in last:
             out[key] = last[key]
     if out.get("prefill_s") is not None and out.get("decode_s") is not None:
@@ -166,6 +174,12 @@ def render_text(summary: dict) -> str:
                              f"{_fmt(pe['final'])}  mean {_fmt(pe['mean'])}")
         for name, count in (tr.get("events") or {}).items():
             lines.append(f"  event {name}: {count}")
+        an = tr.get("anomalies")
+        if an:
+            reasons = "  ".join(f"{k} {v}" for k, v in
+                                an["by_reason"].items())
+            lines.append(f"  anomalies: {an['records']} ({reasons}), "
+                         f"last @ step {an['last_step']}")
         for name, fam in (tr.get("probes") or {}).items():
             lines.append(f"  probe {name}: {fam['records']} records, "
                          f"last @ step {fam['last_step']}")
@@ -179,7 +193,8 @@ def render_text(summary: dict) -> str:
         lines.append(f"  queue_depth_max {sv['queue_depth_max']}  "
                      f"running_max {sv['running_max']}")
         counters = [f"{k} {sv[k]}" for k in
-                    ("admitted", "preempted", "finished", "evicted_pages")
+                    ("admitted", "preempted", "finished", "evicted_pages",
+                     "timed_out")
                     if k in sv]
         if counters:
             lines.append("  " + "  ".join(counters))

@@ -15,6 +15,7 @@ record of exactly one kind, discriminated by its marker key:
   ``gauge``         ``gauge``                   ``gauge``, ``t_s``
   ``kernel``        ``kernel``                  ``kernel``, ``flops``,
                                                 ``bytes``
+  ``anomaly``       ``anomaly``                 ``anomaly``, ``step``
   ================  ==========================  =========================
 
 ``step`` records are the pre-v1 MetricsHook format unchanged (step, loss,
@@ -44,6 +45,9 @@ _KINDS = {
     "probe": ("probe", ("probe", "step")),
     "gauge": ("gauge", ("gauge", "t_s")),
     "kernel": ("kernel", ("kernel", "flops", "bytes")),
+    # training-sentinel verdicts: marker value is the detection reason
+    # ("nonfinite" | "spike" | "trust"), step is where it fired
+    "anomaly": ("anomaly", ("anomaly", "step")),
 }
 
 
@@ -59,7 +63,7 @@ def header_record(stream: str, **meta) -> dict:
 
 def classify(rec: dict) -> str:
     """Record kind by marker key (no validation): header | event | probe |
-    gauge | kernel | step."""
+    gauge | kernel | anomaly | step."""
     if "schema" in rec:
         return "header"
     for kind, (marker, _) in _KINDS.items():
@@ -137,6 +141,10 @@ class TelemetryStream:
 
     def kernels(self) -> list:
         return self.of_kind("kernel")
+
+    def anomalies(self, family: Optional[str] = None) -> list:
+        """Sentinel anomaly records, optionally filtered by reason."""
+        return self.of_kind("anomaly", family)
 
 
 def parse_records(lines: Iterable[str], *, strict: bool = True,

@@ -17,7 +17,7 @@ Gauge record (one per sampled chunk boundary)::
      "block_table_occupancy": owned page slots / (max_batch * P),
      "queue_depth": waiting requests, "running": active slots,
      "admitted": ..., "preempted": ..., "finished": ...,   # cumulative
-     "evicted_pages": ...,                                 # cumulative
+     "evicted_pages": ..., "timed_out": ...,               # cumulative
      "prefill_s": ..., "decode_s": ..., "chunks": ...}     # cumulative
 """
 from __future__ import annotations

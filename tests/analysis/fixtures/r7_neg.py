@@ -1,0 +1,41 @@
+"""R7 negative fixture: narrow handlers, and broad handlers that act
+(log, re-raise, recover) — all legal."""
+import logging
+
+log = logging.getLogger(__name__)
+
+
+def narrow_pass(path):
+    # narrow best-effort cleanup: allowed even with a pass body
+    try:
+        return open(path).read()
+    except OSError:
+        return None
+
+
+def narrow_swallow(d, k):
+    try:
+        del d[k]
+    except KeyError:
+        pass
+
+
+def broad_but_logged(fn):
+    try:
+        fn()
+    except Exception as e:
+        log.warning("fn failed: %s", e)
+
+
+def broad_but_reraised(fn):
+    try:
+        fn()
+    except Exception as e:
+        raise RuntimeError("wrapped") from e
+
+
+def broad_but_recovers(fn, fallback):
+    try:
+        return fn()
+    except Exception:
+        return fallback()

@@ -1,0 +1,40 @@
+"""R7 positive fixture: bare except and silently-swallowing broad
+handlers, each of which erases the transient/anomalous/fatal failure
+classification."""
+import builtins
+
+
+def bare_except(path):
+    try:
+        return open(path).read()
+    except:                        # noqa: E722 — the violation under test
+        return None
+
+
+def swallow_pass(fn):
+    try:
+        fn()
+    except Exception:
+        pass
+
+
+def swallow_ellipsis(fn):
+    try:
+        fn()
+    except (ValueError, Exception):
+        ...
+
+
+def swallow_qualified(fn):
+    try:
+        fn()
+    except builtins.BaseException:
+        """nothing to see here"""
+
+
+def swallow_continue(items):
+    for it in items:
+        try:
+            it()
+        except Exception:
+            continue

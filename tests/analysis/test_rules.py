@@ -35,7 +35,7 @@ def test_rule_quiet_on_negative_fixture(rule_id):
 
 
 def test_rule_ids_are_unique_and_stable():
-    assert sorted(RULES_BY_ID) == ["R1", "R2", "R3", "R4", "R5", "R6"]
+    assert sorted(RULES_BY_ID) == ["R1", "R2", "R3", "R4", "R5", "R6", "R7"]
     assert len(ALL_RULES) == len(RULES_BY_ID)
 
 
@@ -93,3 +93,20 @@ def test_r6_names_the_drifted_fields():
     assert "`data`" in msgs and "from_dict" in msgs
     assert "`new_knob`" in msgs and "to_dict" in msgs
     assert "from_cli_args" in msgs
+
+
+def test_r7_flags_bare_and_swallowing_broad_handlers():
+    pos = run_rule("R7", "r7_pos.py")
+    msgs = " | ".join(f.message for f in pos)
+    assert "bare `except:`" in msgs
+    # all four swallowing shapes: pass, ..., docstring body, continue —
+    # including tuple and attribute-qualified forms of Exception
+    assert sum("swallows" in f.message for f in pos) == 4
+    assert len(pos) == 5
+
+
+def test_r7_skipped_in_test_files():
+    path = FIXTURES / "r7_pos.py"
+    findings = analyze_module(str(path), path.read_text(),
+                              rules=[RULES_BY_ID["R7"]], is_test=True)
+    assert findings == []

@@ -1,0 +1,94 @@
+"""Bounded transient-failure retry: deterministic exponential backoff
+(base * 2^(attempt-1), capped), zero sleeps on the zero-backoff default,
+and attempt-indexed ``recover`` events in the metrics stream."""
+import json
+
+import numpy as np
+import pytest
+from jax.errors import JaxRuntimeError
+
+from repro.data.pipeline import DataConfig
+from repro.run import (CheckpointSpec, FaultSpec, ModelSpec, OptSpec,
+                       RunSpec, StepSpec, build_step_program, run)
+
+
+def _spec(tmp_path, total=7, fault=None, **kw):
+    base = dict(
+        model=ModelSpec(arch="h2o-danube-1.8b", smoke=True),
+        data=DataConfig(vocab=0, seq_len=32, global_batch=4),
+        opt=OptSpec(name="adalomo", lr=1e-3, schedule="constant"),
+        steps=StepSpec(total=total),
+        checkpoint=CheckpointSpec(dir=str(tmp_path / "ck"), every=2),
+        metrics_path=str(tmp_path / "m.jsonl"),
+        fault=fault or FaultSpec(),
+        log_every=0)
+    base.update(kw)
+    return RunSpec(**base)
+
+
+def _flaky_program(spec, fail_on_calls):
+    """A StepProgram whose step raises a transient device error on each
+    call number in ``fail_on_calls`` (same idiom as test_packed_run)."""
+    prog = build_step_program(spec)
+    real = prog.step
+    calls = {"n": 0}
+
+    def step(params, opt_state, batch, hp):
+        out = real(params, opt_state, batch, hp)
+        calls["n"] += 1
+        if calls["n"] in fail_on_calls:
+            raise JaxRuntimeError("injected ICI flap")
+        return out
+
+    prog.step = step
+    return prog
+
+
+@pytest.fixture
+def sleeps(monkeypatch):
+    """Capture every runner backoff sleep instead of actually waiting."""
+    import repro.run.runner as runner_mod
+    rec = []
+    monkeypatch.setattr(runner_mod.time, "sleep", rec.append)
+    return rec
+
+
+def test_backoff_schedule_doubles_and_caps(tmp_path, sleeps):
+    """Two consecutive transient failures: attempt 1 waits the base,
+    attempt 2 doubles but hits the cap; both recover events carry their
+    attempt index, the failed step, and the actual backoff."""
+    spec = _spec(tmp_path, fault=FaultSpec(retries=3, retry_backoff_s=0.05,
+                                           retry_backoff_max_s=0.08))
+    # ckpt labeled 2 saved after step 1; call 4 = step 3, call 5 = the
+    # replayed step 2 right after the first restore
+    res = run(spec, program=_flaky_program(spec, {4, 5}),
+              log_fn=lambda s: None)
+
+    assert sleeps == [0.05, 0.08]
+    assert res.history["step"] == list(range(7))
+    assert np.isfinite(res.history["loss"]).all()
+
+    lines = [json.loads(line) for line in open(spec.metrics_path)]
+    recov = [r for r in lines if r.get("event") == "recover"]
+    assert [(r["attempt"], r["failed_step"], r["step"]) for r in recov] == \
+        [(1, 3, 2), (2, 2, 2)]
+    assert [r["backoff_s"] for r in recov] == [0.05, 0.08]
+
+
+def test_default_backoff_never_sleeps(tmp_path, sleeps):
+    spec = _spec(tmp_path)          # FaultSpec() default: retry_backoff_s=0
+    run(spec, program=_flaky_program(spec, {4}), log_fn=lambda s: None)
+    assert sleeps == []
+    lines = [json.loads(line) for line in open(spec.metrics_path)]
+    recov = [r for r in lines if r.get("event") == "recover"]
+    assert [(r["attempt"], r["backoff_s"]) for r in recov] == [(1, 0.0)]
+
+
+def test_retries_are_bounded(tmp_path, sleeps):
+    """retries=2 means the third failure propagates — no infinite
+    restore loop against a persistent fault."""
+    spec = _spec(tmp_path, fault=FaultSpec(retries=2, retry_backoff_s=0.01))
+    with pytest.raises(JaxRuntimeError, match="injected ICI flap"):
+        run(spec, program=_flaky_program(spec, {4, 5, 6}),
+            log_fn=lambda s: None)
+    assert sleeps == [0.01, 0.02]   # the exhausted attempt never waits

@@ -1,0 +1,154 @@
+"""Injected-fault acceptance (the PR 10 proof): a run with NaN'd updates
+at step k completes under the skip policy with the optimizer state
+untouched at k, emits schema-valid ``anomaly`` records, re-runs bitwise,
+lands within tight tolerance of the clean run, survives a chaos kill with
+its sentinel memory intact, escalates to rollback + quarantine, and fails
+loudly when the anomaly budget is exhausted."""
+import jax
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig
+from repro.run import (CheckpointSpec, ModelSpec, OptSpec, RunSpec,
+                       SentinelSpec, StepSpec, run)
+from repro.sentinel import AnomalyBudgetExceeded, Injection
+from repro.telemetry import read_stream
+
+TOTAL = 8
+K = 3          # fault step, on the executed-step (seen) clock
+
+
+def _spec(total=TOTAL, sentinel=None, **kw):
+    base = dict(
+        model=ModelSpec(arch="h2o-danube-1.8b", smoke=True),
+        data=DataConfig(vocab=0, seq_len=32, global_batch=4),
+        opt=OptSpec(name="adalomo", lr=1e-3, schedule="constant"),
+        steps=StepSpec(total=total),
+        sentinel=sentinel or SentinelSpec(enabled=True),
+        log_every=0)
+    base.update(kw)
+    return RunSpec(**base)
+
+
+def test_injected_nan_run_completes_skips_and_stays_close(tmp_path):
+    mp = str(tmp_path / "m.jsonl")
+    clean = run(_spec(), log_fn=lambda s: None)
+    res = run(_spec(metrics_path=mp),
+              inject=Injection(kind="nan_grads", at_step=K),
+              log_fn=lambda s: None)
+
+    # completes every step; the poisoned update was discarded, so the
+    # optimizer's committed-step counter is exactly one short
+    assert res.history["step"] == list(range(TOTAL))
+    assert int(res.opt_state.step) == TOTAL - 1
+    assert int(clean.opt_state.step) == TOTAL
+
+    # forward passes are untouched through the fault step (the skip
+    # preserved pre-fault params bitwise), then stay within tight
+    # tolerance of the clean run
+    np.testing.assert_array_equal(res.history["loss"][:K + 1],
+                                  clean.history["loss"][:K + 1])
+    assert np.isfinite(res.history["loss"]).all()
+    np.testing.assert_allclose(res.history["loss"][K + 1:],
+                               clean.history["loss"][K + 1:], rtol=0.1)
+
+    # schema-valid stream: exactly one anomaly record, reason nonfinite,
+    # at the fault step, action skip (read_stream validates every record)
+    s = read_stream(mp)
+    anoms = s.anomalies()
+    assert [(a["anomaly"], a["step"], a["action"]) for a in anoms] == \
+        [("nonfinite", K, "skip")]
+    assert anoms[0]["count"] == 1
+    assert s.anomalies("nonfinite") == anoms      # family filter
+    assert [r["step"] for r in s.steps()] == list(range(TOTAL))
+
+    # the guard + injector added zero recompiles
+    assert res.program.cache_size() == 1
+
+
+def test_injected_run_is_bitwise_reproducible(tmp_path):
+    def go(i):
+        mp = str(tmp_path / f"m{i}.jsonl")
+        r = run(_spec(metrics_path=mp),
+                inject=Injection(kind="nan_grads", at_step=K),
+                log_fn=lambda s: None)
+        return r, read_stream(mp)
+
+    r1, s1 = go(1)
+    r2, s2 = go(2)
+    np.testing.assert_array_equal(r1.history["loss"], r2.history["loss"])
+    for a, b in zip(jax.tree.leaves((r1.params, r1.opt_state)),
+                    jax.tree.leaves((r2.params, r2.opt_state))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # anomaly records match on every deterministic field (update_norm is
+    # NaN at a nonfinite step — NaN != NaN, so compare the keyed fields)
+    key = lambda a: (a["anomaly"], a["step"], a["action"], a["count"])
+    assert [key(a) for a in s1.anomalies()] == \
+        [key(a) for a in s2.anomalies()]
+
+
+def test_injected_chaos_kill_resumes_bitwise(tmp_path):
+    """Kill the injected run after the fault, resume from checkpoint: the
+    sentinel's device state rides the checkpoint extra, so the seen-clock
+    keeps the fault from re-firing and the final state is bitwise the
+    uninterrupted injected run's."""
+    from repro.fleet import chaos_run
+
+    inj = Injection(kind="nan_grads", at_step=K)
+
+    def mk(d):
+        return _spec(checkpoint=CheckpointSpec(dir=str(d), every=2))
+
+    rep = chaos_run(mk(tmp_path / "a"), kill_at=[5], inject=inj)
+    straight = run(mk(tmp_path / "b"), inject=inj, log_fn=lambda s: None)
+
+    assert rep.kills == [(5, 4)]
+    for a, b in zip(
+            jax.tree.leaves((rep.result.params, rep.result.opt_state)),
+            jax.tree.leaves((straight.params, straight.opt_state))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the skip survived the kill/resume cycle: still one uncommitted step
+    assert int(rep.result.opt_state.step) == TOTAL - 1
+
+
+def test_rollback_restores_quarantines_and_completes(tmp_path):
+    mp = str(tmp_path / "m.jsonl")
+    sspec = SentinelSpec(enabled=True, ladder=("skip", "rollback"),
+                         rollback_after=1, budget=8)
+    spec = _spec(sentinel=sspec, metrics_path=mp,
+                 checkpoint=CheckpointSpec(dir=str(tmp_path / "ck"),
+                                           every=2))
+    logs = []
+    res = run(spec, inject=Injection(kind="nan_grads", at_step=4),
+              log_fn=logs.append)
+
+    # checkpoint at step 4 existed when the fault hit step 4: rollback
+    # restored it, quarantined [4, 5), and the replay (different seen)
+    # sailed through — the run completes with a clean history
+    assert any("rolled back to step 4" in m for m in logs)
+    assert res.history["step"] == list(range(TOTAL))
+    assert np.isfinite(res.history["loss"]).all()
+
+    a, = read_stream(mp).anomalies()
+    assert a["anomaly"] == "nonfinite" and a["action"] == "rollback"
+    assert a["step"] == 4 and a["anomaly_step"] == 4
+    assert a["quarantine"] == [4, 5]
+
+
+def test_budget_exhaustion_fails_loudly():
+    # a tiny trust bound flags every step; budget 2 allows two anomalies,
+    # the third must abort — NOT spin through restore cycles
+    spec = _spec(sentinel=SentinelSpec(enabled=True, trust_max=1e-12,
+                                       budget=2))
+    with pytest.raises(AnomalyBudgetExceeded, match="budget"):
+        run(spec, log_fn=lambda s: None)
+
+
+def test_budget_abort_is_recorded(tmp_path):
+    mp = str(tmp_path / "m.jsonl")
+    spec = _spec(sentinel=SentinelSpec(enabled=True, trust_max=1e-12,
+                                       budget=1), metrics_path=mp)
+    with pytest.raises(AnomalyBudgetExceeded):
+        run(spec, log_fn=lambda s: None)
+    anoms = read_stream(mp).anomalies()
+    assert anoms[-1]["action"] == "abort" and anoms[-1]["count"] == 2

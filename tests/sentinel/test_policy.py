@@ -1,0 +1,122 @@
+"""Host-side sentinel policy: monitor bookkeeping (budget, streak,
+escalation, quarantine), checkpoint-extra round-trips that rebuild the
+device state exactly, and the quarantined data stream."""
+import jax
+import numpy as np
+
+from repro.data.pipeline import DataConfig
+from repro.models.registry import get_arch
+from repro.run import ModelSpec, OptSpec, RunSpec, SentinelSpec, StepSpec
+from repro.run.data import make_batch_iter
+from repro.sentinel import (QUARANTINE_SEED_OFFSET, SentinelMonitor,
+                            quarantined_batch_iter, state_from_snapshot)
+
+
+def _spec(total=8, **kw):
+    base = dict(
+        model=ModelSpec(arch="h2o-danube-1.8b", smoke=True),
+        data=DataConfig(vocab=0, seq_len=32, global_batch=4),
+        opt=OptSpec(name="adalomo", lr=1e-3, schedule="constant"),
+        steps=StepSpec(total=total),
+        log_every=0)
+    base.update(kw)
+    return RunSpec(**base)
+
+
+def _verdict(anomaly=0.0, nonfinite=0.0, spike=0.0, trust=0.0, seen=1,
+             clean=1, ema=0.5, backoff=0, skipped=0):
+    return {"anomaly": anomaly, "nonfinite": nonfinite, "spike": spike,
+            "trust": trust, "seen": float(seen), "clean": float(clean),
+            "ema": ema, "backoff": float(backoff),
+            "skipped": float(skipped)}
+
+
+def test_monitor_budget_streak_and_escalation():
+    m = SentinelMonitor(SentinelSpec(enabled=True,
+                                     ladder=("skip", "rollback"),
+                                     rollback_after=2, budget=3))
+    assert not m.observe(0, _verdict())
+    assert m.observe(1, _verdict(anomaly=1.0, nonfinite=1.0))
+    assert m.streak == 1 and not m.wants_rollback()
+    assert m.observe(2, _verdict(anomaly=1.0, spike=1.0))
+    assert m.wants_rollback()
+
+    m.quarantine(1, 3)
+    assert m.streak == 0 and m.rollbacks == 1
+    assert m.is_quarantined(1) and m.is_quarantined(2)
+    assert not m.is_quarantined(3)
+
+    assert not m.exhausted()
+    m.observe(3, _verdict(anomaly=1.0, trust=1.0))
+    m.observe(4, _verdict(anomaly=1.0, trust=1.0))
+    assert m.anomalies == 4 and m.exhausted()
+
+
+def test_classify_priority_order():
+    assert SentinelMonitor.classify(
+        _verdict(anomaly=1, nonfinite=1, spike=1)) == "nonfinite"
+    assert SentinelMonitor.classify(
+        _verdict(anomaly=1, spike=1, trust=1)) == "spike"
+    assert SentinelMonitor.classify(_verdict(anomaly=1, trust=1)) == "trust"
+    assert SentinelMonitor.classify(_verdict(anomaly=1)) == "unknown"
+
+
+def test_extra_round_trip_rebuilds_device_state():
+    m = SentinelMonitor(SentinelSpec(enabled=True))
+    m.observe(5, _verdict(anomaly=1.0, nonfinite=1.0, seen=6, clean=4,
+                          ema=0.25, backoff=2, skipped=2))
+    m.quarantine(4, 6)
+    extra = m.to_extra()
+
+    m2 = SentinelMonitor(SentinelSpec(enabled=True))
+    m2.load_extra(extra)
+    assert m2.to_extra() == extra
+    assert m2.is_quarantined(5)
+
+    sent = state_from_snapshot(extra["state"])
+    assert int(sent.seen) == 6 and int(sent.clean) == 4
+    assert float(sent.ema) == 0.25
+    assert int(sent.backoff) == 2 and int(sent.skipped) == 2
+
+
+def test_quarantined_iter_substitutes_only_the_range():
+    """Outside a quarantined range the stream is bitwise the primary
+    stream; inside, it is bitwise the QUARANTINE_SEED_OFFSET stream."""
+    spec = _spec()
+    arch = get_arch("h2o-danube-1.8b", smoke=True)
+    m = SentinelMonitor(SentinelSpec(enabled=True))
+    m.quarantine(2, 3)
+
+    q = quarantined_batch_iter(spec, arch, 0, m)
+    primary = make_batch_iter(spec, arch, 0)
+    alt = next(make_batch_iter(spec, arch, 2,
+                               seed_offset=QUARANTINE_SEED_OFFSET))
+    for step in range(5):
+        got, ref = next(q), next(primary)
+        if step == 2:
+            for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(alt)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            assert not all(
+                np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)))
+        else:
+            for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quarantined_iter_respects_start_step():
+    spec = _spec()
+    arch = get_arch("h2o-danube-1.8b", smoke=True)
+    m = SentinelMonitor(SentinelSpec(enabled=True))
+    m.quarantine(3, 4)
+    # a rewound iterator starting at step 3 yields the replacement batch
+    # first, then rejoins the primary stream at step 4
+    q = quarantined_batch_iter(spec, arch, 3, m)
+    alt = next(make_batch_iter(spec, arch, 3,
+                               seed_offset=QUARANTINE_SEED_OFFSET))
+    got = next(q)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(alt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ref = make_batch_iter(spec, arch, 4)
+    for a, b in zip(jax.tree.leaves(next(q)), jax.tree.leaves(next(ref))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

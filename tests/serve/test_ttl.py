@@ -1,0 +1,90 @@
+"""Request TTL in the paged engine: a request whose deadline passes is
+evicted at the next chunk boundary — pages back in the pool, partial
+output kept and frozen, ``timed_out`` counted in the gauges — while
+untimed requests run to completion.  Driven by an injected fake clock, so
+nothing sleeps."""
+import jax
+import pytest
+
+from benchmarks.common import tiny_llama
+from repro.serve.engine import PagedEngine, PagedServeConfig
+from repro.serve.scheduler import TIMED_OUT
+from repro.telemetry import read_stream
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def setup():
+    arch = tiny_llama(layers=2, d=64)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    return arch, params
+
+
+def _cfg(**kw):
+    base = dict(page_size=8, num_pages=32, max_batch=3, max_pages_per_seq=8,
+                chunk=4, max_new_tokens=8, bucket_min=8)
+    base.update(kw)
+    return PagedServeConfig(**base)
+
+
+def test_expired_request_is_evicted_at_chunk_boundary(setup, tmp_path):
+    arch, params = setup
+    clock = FakeClock()
+    path = tmp_path / "g.jsonl"
+    eng = PagedEngine(arch, params, _cfg(telemetry_path=str(path)),
+                      clock=clock)
+    free0 = eng.allocator.n_free
+
+    ra = eng.submit([5, 17, 23, 9], ttl_s=10.0)
+    rb = eng.submit([7, 8, 9])                  # no TTL: must finish
+    a, b = eng.requests[ra], eng.requests[rb]
+    assert a.deadline_s == 10.0 and b.deadline_s is None
+
+    eng.step()                                  # both admitted, one chunk
+    assert a.status == "running" and len(a.out) > 0
+
+    clock.t = 11.0                              # past A's deadline
+    eng.step()
+    assert a.status == TIMED_OUT
+    assert a.pages == [] and a.slot is None     # pool got its pages back
+    partial = list(a.out)
+    assert partial                              # partial output kept
+
+    eng.run()                                   # B unaffected by the TTL
+    assert b.status == "finished" and len(b.out) == 8
+    assert a.out == partial                     # ...and A's out is frozen
+    assert eng.allocator.n_free == free0        # every page reclaimed
+    assert eng.scheduler.counters["timed_out"] == 1
+    assert eng.scheduler.counters["finished"] == 1
+
+    # the lifetime counter reaches the gauge stream
+    gauges = read_stream(path).gauges()
+    assert gauges[-1]["timed_out"] == 1 and gauges[-1]["running"] == 0
+
+
+def test_default_ttl_expires_running_and_queued(setup):
+    """scfg.ttl_s stamps every submit; a queued request that never got a
+    slot times out too (dropped with empty output) and run() terminates."""
+    arch, params = setup
+    clock = FakeClock()
+    eng = PagedEngine(arch, params, _cfg(max_batch=1, ttl_s=5.0),
+                      clock=clock)
+    ra = eng.submit([1, 2, 3, 4])
+    rb = eng.submit([9, 9, 9])                  # only one slot: stays queued
+    eng.step()
+    a, b = eng.requests[ra], eng.requests[rb]
+    assert a.status == "running" and b.status == "queued"
+
+    clock.t = 6.0
+    eng.run()
+    assert a.status == TIMED_OUT and a.out      # evicted mid-flight
+    assert b.status == TIMED_OUT and b.out == []   # never ran at all
+    assert eng.scheduler.counters["timed_out"] == 2
+    assert not eng.scheduler.has_work()

@@ -79,3 +79,78 @@ def test_restore_with_no_complete_steps_raises(tmp_path):
     assert mgr.latest_step() is None
     with pytest.raises(FileNotFoundError):
         mgr.restore(template=_tree())
+
+
+# -------------------------------------------------------------- corruption
+# A _COMPLETE marker proves the *writer* finished; it says nothing about
+# what the disk did to the bytes afterwards.  restore() validates every
+# leaf (existence, size vs the manifest's nbytes, np.load, shape/dtype)
+# and falls back to the previous complete step, flagging the damaged dir.
+
+def _leaf_files(d):
+    return sorted(d.glob("arr_*.npy"))
+
+
+def test_truncated_leaf_falls_back_and_flags(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ck", async_write=False)
+    tree = _tree()
+    mgr.save(3, tree)
+    mgr.save(6, tree)
+    bad = mgr.dir / "step_000000006"
+    leaf = _leaf_files(bad)[0]
+    leaf.write_bytes(leaf.read_bytes()[:-16])   # lost the tail on disk
+
+    step, got, _ = mgr.restore(template=tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(tree["w"]))
+    # flagged: discovery skips it from now on, gc reclaims it
+    assert (bad / CheckpointManager.DAMAGED_MARKER).exists()
+    assert mgr.latest_step() == 3
+    assert "step_000000006" in mgr.gc_incomplete()
+    assert not bad.exists()
+
+
+def test_garbled_leaf_explicit_step_raises_latest_falls_back(tmp_path):
+    from repro.checkpoint.manager import CorruptCheckpoint
+    mgr = CheckpointManager(tmp_path / "ck", async_write=False)
+    tree = _tree()
+    mgr.save(2, tree)
+    mgr.save(4, tree)
+    leaf = _leaf_files(mgr.dir / "step_000000004")[0]
+    data = bytearray(leaf.read_bytes())
+    data[:6] = b"GARBLE"                # same size, unreadable npy header
+    leaf.write_bytes(bytes(data))
+
+    # an explicitly requested step never falls back silently
+    with pytest.raises(CorruptCheckpoint):
+        mgr.restore(step=4, template=tree)
+    step, got, _ = mgr.restore(template=tree)
+    assert step == 2
+
+
+def test_every_checkpoint_damaged_raises(tmp_path):
+    from repro.checkpoint.manager import CorruptCheckpoint
+    mgr = CheckpointManager(tmp_path / "ck", async_write=False)
+    tree = _tree()
+    mgr.save(5, tree)
+    _leaf_files(mgr.dir / "step_000000005")[0].unlink()
+    with pytest.raises(CorruptCheckpoint, match="damaged"):
+        mgr.restore(template=tree)
+
+
+def test_manifest_without_nbytes_still_restores(tmp_path):
+    """Pre-v10 manifests carry no nbytes — the size check is skipped,
+    not failed (back-compat with existing checkpoint dirs)."""
+    mgr = CheckpointManager(tmp_path / "ck", async_write=False)
+    tree = _tree()
+    mgr.save(7, tree)
+    mpath = mgr.dir / "step_000000007" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    for leaf in manifest["leaves"]:
+        leaf.pop("nbytes")
+    mpath.write_text(json.dumps(manifest))
+    step, got, _ = mgr.restore(template=tree)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(tree["w"]))
